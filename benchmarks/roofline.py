@@ -1,0 +1,58 @@
+"""§Roofline table: read the dry-run records and emit the three-term roofline
+per (arch x shape x mesh) — compute/memory/collective seconds, dominant
+bound, MODEL_FLOPS ratio, per-device memory."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN = Path("benchmarks/results/dryrun")
+
+
+def rows(mesh_prefix: str = "single"):
+    out = []
+    for p in sorted(DRYRUN.glob(f"{mesh_prefix}__*.json")):
+        r = json.loads(p.read_text())
+        out.append(r)
+    return out
+
+
+def main() -> None:
+    if not DRYRUN.exists():
+        emit("roofline.missing", 0.0, "run scripts/sweep_dryrun.sh first")
+        return
+    counts = {"compute": 0, "memory": 0, "collective": 0}
+    for r in rows("single"):
+        cell = f"{r['arch']}.{r['shape']}"
+        if r["status"] == "skip":
+            emit(f"roofline.{cell}", 0.0, "SKIP:" + r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline.{cell}", 0.0, "ERROR")
+            continue
+        t = r["roofline"]
+        counts[t["bound"]] += 1
+        emit(
+            f"roofline.{cell}",
+            t["step_s_lower_bound"] * 1e6,
+            (
+                f"bound={t['bound']};c_ms={t['compute_s']*1e3:.2f};"
+                f"m_ms={t['memory_s']*1e3:.2f};k_ms={t['collective_s']*1e3:.2f};"
+                f"useful={r['useful_compute_ratio']:.2f};"
+                f"memGB={r['mem']['per_device_total']/1e9:.1f}"
+            ),
+        )
+    ok_multi = sum(1 for r in rows("multi") if r["status"] == "ok")
+    skip_multi = sum(1 for r in rows("multi") if r["status"] == "skip")
+    emit(
+        "roofline.summary",
+        0.0,
+        f"bounds={counts};multi_pod_ok={ok_multi};multi_pod_skip={skip_multi}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Generate the EXPERIMENTS.md roofline table from dry-run JSON records."""
+import json
+import sys
+from pathlib import Path
+
+DRYRUN = Path("benchmarks/results/dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "xlstm-350m", "smollm-360m", "glm4-9b", "granite-8b", "qwen1.5-32b",
+    "jamba-1.5-large-398b", "dbrx-132b", "llama4-maverick-400b-a17b",
+    "qwen2-vl-2b", "whisper-large-v3",
+]
+
+NOTES = {}
+
+
+def fmt(v, unit=1e3, nd=1):
+    return f"{v*unit:.{nd}f}"
+
+
+def main(mesh="single"):
+    print("| arch | shape | bound | compute (ms) | memory (ms) | collective (ms) | useful | mem GB/dev | adj GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = DRYRUN / f"{mesh}__{arch}__{shape}.json"
+            if not p.exists():
+                continue
+            r = json.loads(p.read_text())
+            if r["status"] == "skip":
+                print(f"| {arch} | {shape} | SKIP | — | — | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | ERROR | — | — | — | — | — | — |")
+                continue
+            t = r["roofline"]
+            m = r["mem"]
+            # TPU-adjusted fit: CPU backend hoists f32 upcasts of bf16 weights
+            # (2x param bytes of artificial temp) — see §Dry-run notes.
+            adj = m["per_device_total"] - 2 * r.get("params_bytes_per_dev", 0)
+            print(
+                f"| {arch} | {shape} | {t['bound']} | {fmt(t['compute_s'])} | "
+                f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+                f"{r['useful_compute_ratio']:.2f} | {m['per_device_total']/1e9:.1f} | "
+                f"{max(adj,0)/1e9:.1f} |"
+            )
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,72 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+D = 512  # d_model
+F = 2048  # d_ff
+L = 8  # layers
+B = 32  # batch
+
+
+def layer(x, w1, w2):
+    h = jnp.einsum("bd,df->bf", x, w1)
+    h = jax.nn.gelu(h)
+    x = x + jnp.einsum("bf,fd->bd", h, w2)
+    return x
+
+
+def model_scan(x, w1s, w2s):
+    def body(x, ws):
+        return layer(x, ws[0], ws[1]), None
+
+    x, _ = jax.lax.scan(body, x, (w1s, w2s))
+    return x.sum()
+
+
+def model_unroll(x, w1s, w2s):
+    for i in range(L):
+        x = layer(x, w1s[i], w2s[i])
+    return x.sum()
+
+
+analytic_flops = L * 2 * B * D * F * 2  # two matmuls per layer
+print("analytic flops:", analytic_flops / 1e9, "GF")
+
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("mesh ok:", mesh.shape)
+
+xs = jax.ShapeDtypeStruct((B, D), jnp.float32)
+w1 = jax.ShapeDtypeStruct((L, D, F), jnp.float32)
+w2 = jax.ShapeDtypeStruct((L, F, D), jnp.float32)
+
+sh_x = NamedSharding(mesh, P(("pod", "data"), None))
+sh_w1 = NamedSharding(mesh, P(None, None, "model"))
+sh_w2 = NamedSharding(mesh, P(None, "model", None))
+
+for name, fn in [("scan", model_scan), ("unroll", model_unroll)]:
+    t0 = time.time()
+    lowered = jax.jit(fn, in_shardings=(sh_x, sh_w1, sh_w2)).lower(xs, w1, w2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ca = compiled.cost_analysis()
+    flops = ca.get("flops", -1)
+    print(
+        f"{name}: lower={t1-t0:.1f}s compile={t2-t1:.1f}s flops={flops/1e9:.3f}GF "
+        f"(x512 dev = {flops*512/1e9:.1f}GF) ratio_vs_analytic={flops*512/analytic_flops:.3f}"
+    )
+    mem = compiled.memory_analysis()
+    print(f"  mem: args={mem.argument_size_in_bytes} temp={mem.temp_size_in_bytes}")
+    txt = compiled.as_text()
+    import re
+
+    colls = re.findall(r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)[^(]*\(", txt)
+    from collections import Counter
+
+    print("  collectives:", Counter(c.split("(")[0].strip() for c in colls))
+    print("  hlo size:", len(txt))

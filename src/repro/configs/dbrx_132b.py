@@ -1,0 +1,33 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained (hf:databricks/dbrx-base).
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352, MoE 16e top-4.
+"""
+import jax.numpy as jnp
+
+from repro.models import MoECfg, ModelConfig
+
+from repro.configs.shapes import FULL_ATTENTION_SKIP
+
+FULL = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    # fsdp_experts: 254 GB of expert weights don't fit 16-way TP alone —
+    # shard d_ff over 'data' too and all-gather at use (ZeRO-3 semantics).
+    moe=MoECfg(n_experts=16, top_k=4, every_k=1, fsdp_experts=True),
+    rope_theta=500000.0,
+)
+
+SMOKE = FULL.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512,
+    moe=MoECfg(n_experts=4, top_k=2, every_k=1),
+    param_dtype=jnp.float32, compute_dtype=jnp.float32, remat="none",
+    attn_chunk=8, ce_chunks=2,
+)
+
+SKIP_SHAPES = {"long_500k": FULL_ATTENTION_SKIP}

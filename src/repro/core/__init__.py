@@ -1,0 +1,39 @@
+"""StraightLine core: the paper's primary contribution.
+
+Empirical Dynamic Placing (Algorithm 1), telemetry, tier models, the
+discrete-event hybrid-infrastructure simulator, and the online router.
+"""
+from repro.core.placing import (
+    AdaptiveThresholds,
+    RandomPolicy,
+    RoundRobinPolicy,
+    SLOAwarePolicy,
+    StaticPolicy,
+    StraightLinePolicy,
+    Thresholds,
+    placing_batch_jax,
+)
+from repro.core.request import PlacementDecision, Request, Tier
+from repro.core.simulator import SimConfig, Simulation
+from repro.core.telemetry import FrequencyEstimator, Metrics
+from repro.core.tiers import TierConfig, TierSim
+
+__all__ = [
+    "AdaptiveThresholds",
+    "FrequencyEstimator",
+    "Metrics",
+    "PlacementDecision",
+    "RandomPolicy",
+    "Request",
+    "RoundRobinPolicy",
+    "SLOAwarePolicy",
+    "SimConfig",
+    "Simulation",
+    "StaticPolicy",
+    "StraightLinePolicy",
+    "Thresholds",
+    "Tier",
+    "TierConfig",
+    "TierSim",
+    "placing_batch_jax",
+]

@@ -1,0 +1,126 @@
+"""Roofline-backed latency / memory estimator.
+
+Service-time models for the discrete-event simulator and the SLO-aware
+policy. Two sources, merged:
+
+  * dry-run JSON records (benchmarks/results/dryrun/*.json) — per (arch,
+    shape) roofline terms of the real compiled programs;
+  * analytic fallback — 2*N_active*D / peak with memory/collective floors,
+    for arbitrary request sizes between the measured shapes.
+
+A tier's hardware profile scales the terms: an interactive slice with 8
+chips has 8/256 of the pod's compute, the elastic tier pays a cold-start =
+weight-load time (bytes(params)/HBM_bw) + slice allocation — mirroring the
+paper's container-activation overhead.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclass(frozen=True)
+class SliceProfile:
+    """A compute slice backing a tier. speed_factor rescales per-chip peak —
+    1.0 is a TPU v5e chip; the paper-calibrated testbed uses CPU-class
+    factors so the reproduction matches the paper's measured latencies."""
+
+    chips: int
+    name: str = ""
+    alloc_s: float = 0.0          # slice acquisition time (elastic tier)
+    hbm_frac: float = 1.0         # memory class: fraction of chip HBM usable
+                                   # (paper's Lambda 2GB vs 3GB analogue)
+    speed_factor: float = 1.0     # effective peak = speed_factor * chips * PEAK
+
+
+@dataclass(frozen=True)
+class AppProfile:
+    """Deployed-model profile consumed by the estimator."""
+
+    name: str
+    active_params: float           # N_active
+    param_bytes: float             # weight bytes (cold-start load)
+    flops_per_unit: float          # FLOPs per work unit (e.g. per token/image)
+    bytes_per_unit: float          # HBM bytes per work unit
+    base_overhead_s: float = 2e-3  # dispatch/step overhead
+
+
+def xception_profile(width: int = 32, img: int = 299) -> AppProfile:
+    # paper: 110.9 MB weights, 109.4 ms inference => calibrate to those.
+    n = 22.9e6                       # Xception params
+    return AppProfile(
+        name="xception",
+        active_params=n,
+        param_bytes=110.9e6,
+        flops_per_unit=9.1e9,        # ~FLOPs per 299x299 image
+        bytes_per_unit=6 * n / 8,    # activation+weight traffic per image
+        base_overhead_s=2e-3,
+    )
+
+
+def lm_profile(arch: str, active_params: float, param_bytes: float) -> AppProfile:
+    return AppProfile(
+        name=arch,
+        active_params=active_params,
+        param_bytes=param_bytes,
+        flops_per_unit=2.0 * active_params,      # per token
+        bytes_per_unit=2.0 * active_params * 0.02,  # KV+activation traffic/token
+    )
+
+
+class LatencyEstimator:
+    def __init__(self, dryrun_dir: Optional[str] = None):
+        self.records: Dict[tuple, dict] = {}
+        if dryrun_dir and Path(dryrun_dir).exists():
+            for p in Path(dryrun_dir).glob("single__*.json"):
+                try:
+                    r = json.loads(p.read_text())
+                except Exception:
+                    continue
+                if r.get("status") == "ok":
+                    self.records[(r["arch"], r["shape"])] = r
+
+    def step_time(self, arch: str, shape: str, chips_frac: float = 1.0) -> Optional[float]:
+        """Roofline lower bound from a measured dry-run cell, rescaled to a
+        smaller slice (compute/memory scale with chips; collectives shrink)."""
+        r = self.records.get((arch, shape))
+        if not r:
+            return None
+        t = r["roofline"]
+        return max(
+            t["compute_s"] / chips_frac,
+            t["memory_s"] / chips_frac,
+            t["collective_s"],
+        )
+
+    @staticmethod
+    def service_time(app: AppProfile, work_units: float, slice_: SliceProfile) -> float:
+        """Analytic per-request service time on a given slice. Weights are
+        resident (loaded once at cold start), so only activation/KV traffic
+        counts here."""
+        peak = slice_.speed_factor * slice_.chips * PEAK_FLOPS
+        bw = slice_.speed_factor * slice_.chips * HBM_BW * slice_.hbm_frac
+        compute = app.flops_per_unit * work_units / peak
+        memory = app.bytes_per_unit * work_units / bw
+        return app.base_overhead_s + max(compute, memory)
+
+    LOAD_BW = 150e6  # container-image pull + weight staging bandwidth
+
+    @staticmethod
+    def cold_start(app: AppProfile, slice_: SliceProfile) -> float:
+        """Paper's container-activation analogue: slice/instance allocation +
+        weight staging (image pull), ~1 s for the 110.9 MB Xception."""
+        return slice_.alloc_s + app.param_bytes / max(1, slice_.chips) / LatencyEstimator.LOAD_BW
+
+
+def transfer_time(data_size_bytes: float, bw_bytes_s: float = 10e6) -> float:
+    """Client->tier upload time; the paper's reason to keep small payloads
+    off remote tiers (maxBandwidth on IIS, Lambda ingress)."""
+    return data_size_bytes / bw_bytes_s

@@ -1,0 +1,176 @@
+"""Empirical Dynamic Placing Algorithm (paper Algorithm 1) + variants.
+
+Faithful control flow::
+
+    if f_t > F and r_d < D:   serverless     # burst of small payloads
+    elif r_d > D:             docker         # large payload, latency-tolerant
+    elif S_F available:       flask          # moderate -> lowest latency
+    elif S_D available:       docker
+    else:                     serverless
+
+Variants (paper §IV future work, implemented here as beyond-paper features):
+  * SLOAwarePolicy        — picks argmin estimated-completion subject to SLO
+  * AdaptiveThresholds    — F/D re-fit online from telemetry + tier models
+  * placing_batch_jax     — vectorized jnp version for high-rate routers
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.request import PlacementDecision, Request, Tier
+
+
+@dataclass
+class Thresholds:
+    F: float = 1200.0   # requests / window — the paper's interactive-tier knee
+    D: float = 1.0e6    # bytes — payloads above this go to the batch tier
+
+
+class StraightLinePolicy:
+    """Algorithm 1, line-for-line."""
+
+    name = "straightline"
+
+    def __init__(self, thresholds: Thresholds = Thresholds()):
+        self.th = thresholds
+
+    def place(self, req: Request, f_t: float, flask_free: int, docker_free: int) -> PlacementDecision:
+        th = self.th
+        if f_t > th.F and req.data_size < th.D:                      # line 3
+            return PlacementDecision(req.rid, Tier.SERVERLESS, "f_t>F and r_d<D")
+        if req.data_size > th.D:                                     # line 6
+            return PlacementDecision(req.rid, Tier.DOCKER, "r_d>D")
+        if flask_free > 0:                                           # line 10
+            return PlacementDecision(req.rid, Tier.FLASK, "S_F non-empty")
+        if docker_free > 0:                                          # line 14
+            return PlacementDecision(req.rid, Tier.DOCKER, "S_F empty, S_D non-empty")
+        return PlacementDecision(req.rid, Tier.SERVERLESS, "all busy")  # line 18
+
+    def place_all(self, reqs: Sequence[Request], f_t: float, flask_free: int, docker_free: int):
+        """Paper's batch form: place a waiting queue R, consuming availability."""
+        out: List[PlacementDecision] = []
+        ff, df = flask_free, docker_free
+        for r in reqs:
+            d = self.place(r, f_t, ff, df)
+            if d.tier == Tier.FLASK:
+                ff -= 1
+            elif d.tier == Tier.DOCKER and "S_D" in d.reason:
+                df -= 1
+            out.append(d)
+        return out
+
+
+class StaticPolicy:
+    """Everything to one tier — the paper's per-platform evaluation curves."""
+
+    def __init__(self, tier: Tier):
+        self.tier = tier
+        self.name = f"static-{tier.name.lower()}"
+
+    def place(self, req, f_t, flask_free, docker_free):
+        return PlacementDecision(req.rid, self.tier, "static")
+
+
+class RoundRobinPolicy:
+    name = "round-robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def place(self, req, f_t, flask_free, docker_free):
+        t = Tier(self._i % 3)
+        self._i += 1
+        return PlacementDecision(req.rid, t, "rr")
+
+
+class RandomPolicy:
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def place(self, req, f_t, flask_free, docker_free):
+        return PlacementDecision(req.rid, Tier(int(self.rng.integers(0, 3))), "random")
+
+
+class SLOAwarePolicy:
+    """Beyond-paper (paper future-work §2): choose the cheapest tier whose
+    estimated completion meets the request SLO; fall back to fastest."""
+
+    name = "slo-aware"
+
+    def __init__(self, tier_models, cost=(1.0, 0.6, 0.3)):
+        self.tier_models = tier_models  # Tier -> callable(req, f_t) -> est seconds
+        self.cost = cost                 # relative $ cost per tier
+
+    def place(self, req, f_t, flask_free, docker_free):
+        free = {Tier.FLASK: flask_free > 0, Tier.DOCKER: docker_free > 0, Tier.SERVERLESS: True}
+        ests = {t: m(req, f_t) for t, m in self.tier_models.items()}
+        slo = req.slo_s if req.slo_s is not None else req.timeout_s
+        ok = [t for t in Tier if free[t] and ests[t] <= slo]
+        if ok:
+            pick = min(ok, key=lambda t: self.cost[int(t)])
+            return PlacementDecision(req.rid, pick, f"slo est={ests[pick]:.3f}s")
+        pick = min([t for t in Tier if free[t]], key=lambda t: ests[t])
+        return PlacementDecision(req.rid, pick, "slo-miss fastest")
+
+
+class AdaptiveThresholds:
+    """Beyond-paper (paper future-work §3): re-fit F to the observed
+    interactive-tier saturation knee and D to the tier crossover point."""
+
+    def __init__(self, base: Thresholds, interactive_capacity_rps: float, window_s: float = 180.0):
+        self.th = Thresholds(base.F, base.D)
+        self.cap = interactive_capacity_rps
+        self.window_s = window_s
+        self._ewma_util = 0.0
+
+    def update(self, interactive_utilization: float, docker_service_s: float, flask_service_s: float, link_bw: float = 10e6):
+        # F: keep interactive below ~85% utilization of its measured capacity.
+        self._ewma_util = 0.9 * self._ewma_util + 0.1 * interactive_utilization
+        self.th.F = max(10.0, 0.85 * self.cap * self.window_s * (1.5 - self._ewma_util))
+        # D: payload size where upload time starts to dominate the service gap.
+        self.th.D = max(1e4, (docker_service_s - flask_service_s) * link_bw)
+        return self.th
+
+
+def placing_batch_jax(
+    f_t: jnp.ndarray,        # () or (N,) requests/window
+    r_d: jnp.ndarray,        # (N,) data sizes
+    flask_free: jnp.ndarray, # () int — availability snapshot
+    docker_free: jnp.ndarray,
+    F: float,
+    D: float,
+) -> jnp.ndarray:
+    """Vectorized Algorithm 1 (availability consumed in arrival order):
+    returns int tier ids (N,). Used by the high-rate router front-end and
+    property-tested against the python loop."""
+    N = r_d.shape[0]
+    f_t = jnp.broadcast_to(jnp.asarray(f_t, jnp.float32), (N,))
+    burst = (f_t > F) & (r_d < D)
+    big = r_d > D
+    # availability is consumed by earlier requests in the batch
+    want_flask = ~burst & ~big
+    flask_rank = jnp.cumsum(want_flask.astype(jnp.int32)) - 1
+    got_flask = want_flask & (flask_rank < flask_free)
+    want_docker2 = want_flask & ~got_flask
+    docker_rank = jnp.cumsum(want_docker2.astype(jnp.int32)) - 1
+    got_docker2 = want_docker2 & (docker_rank < docker_free)
+    tier = jnp.where(
+        burst,
+        int(Tier.SERVERLESS),
+        jnp.where(
+            big,
+            int(Tier.DOCKER),
+            jnp.where(
+                got_flask,
+                int(Tier.FLASK),
+                jnp.where(got_docker2, int(Tier.DOCKER), int(Tier.SERVERLESS)),
+            ),
+        ),
+    )
+    return tier.astype(jnp.int32)

@@ -1,0 +1,121 @@
+"""Online StraightLine router — fronts *real* execution backends.
+
+The simulator (simulator.py) validates policies at scale; this router runs
+the same Algorithm-1 logic against live backends (e.g. the JAX serving
+engine or the Xception classifier in examples/). Single-threaded event-loop
+style: callers submit requests, ``poll()`` drains whatever is due.
+
+Fault tolerance: per-request deadline, retry-once on a different tier,
+hedging for stragglers (duplicate to the elastic tier past the hedge
+deadline — first result wins).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.placing import StraightLinePolicy
+from repro.core.request import Request, Tier
+from repro.core.telemetry import FrequencyEstimator, Metrics
+
+
+@dataclass
+class Backend:
+    """A live tier: run(req) executes synchronously and returns the result."""
+
+    tier: Tier
+    run: Callable[[Request], object]
+    capacity: int = 1            # concurrent requests the tier accepts
+    queue_cap: int = 64
+    inflight: int = 0
+    queue: List[Request] = field(default_factory=list)
+
+
+class StraightLineRouter:
+    def __init__(
+        self,
+        backends: Dict[Tier, Backend],
+        policy: Optional[StraightLinePolicy] = None,
+        window_s: float = 180.0,
+        clock: Callable[[], float] = time.monotonic,
+        hedge_after_s: Optional[float] = None,
+        retry_on_failure: bool = True,
+    ):
+        self.backends = backends
+        self.policy = policy or StraightLinePolicy()
+        self.freq = FrequencyEstimator(window_s=window_s)
+        self.clock = clock
+        self.metrics = Metrics()
+        self.hedge_after_s = hedge_after_s
+        self.retry_on_failure = retry_on_failure
+        self.results: Dict[int, object] = {}
+
+    def _free(self, t: Tier) -> int:
+        b = self.backends[t]
+        return max(0, b.capacity - b.inflight) + max(0, b.queue_cap - len(b.queue))
+
+    def submit(self, req: Request) -> Tier:
+        now = self.clock()
+        req.arrival_t = now
+        self.freq.observe(now)
+        f_t = self.freq.frequency(now)
+        d = self.policy.place(req, f_t, self._free(Tier.FLASK), self._free(Tier.DOCKER))
+        req.tier = d.tier
+        self.backends[d.tier].queue.append(req)
+        return d.tier
+
+    def _run_one(self, b: Backend, req: Request) -> None:
+        now = self.clock()
+        if now - req.arrival_t > req.timeout_s:
+            self._fail(req, "timeout-in-queue")
+            return
+        b.inflight += 1
+        req.start_t = now
+        try:
+            out = b.run(req)
+            req.finish_t = self.clock()
+            if req.finish_t - req.arrival_t > req.timeout_s:
+                self._fail(req, "timeout")
+            else:
+                self.results[req.rid] = out
+                self.metrics.record(req)
+        except Exception as e:  # tier failure
+            if self.retry_on_failure and not req.hedged and req.tier != Tier.SERVERLESS:
+                req.hedged = True
+                self.backends[Tier.SERVERLESS].queue.append(req)
+            else:
+                self._fail(req, f"error:{type(e).__name__}")
+        finally:
+            b.inflight -= 1
+
+    def _fail(self, req: Request, reason: str) -> None:
+        req.failed = True
+        req.fail_reason = reason
+        req.finish_t = self.clock()
+        self.metrics.record(req)
+
+    def poll(self) -> int:
+        """Drain one waiting request per tier (round-robin-ish); returns the
+        number executed."""
+        ran = 0
+        for b in self.backends.values():
+            while b.queue and b.inflight < b.capacity:
+                req = b.queue.pop(0)
+                if (
+                    self.hedge_after_s is not None
+                    and not req.hedged
+                    and self.clock() - req.arrival_t > self.hedge_after_s
+                    and b.tier != Tier.SERVERLESS
+                ):
+                    req.hedged = True
+                    self.backends[Tier.SERVERLESS].queue.append(req)
+                    continue
+                self._run_one(b, req)
+                ran += 1
+        return ran
+
+    def drain(self) -> None:
+        while any(b.queue for b in self.backends.values()):
+            if self.poll() == 0:
+                break

@@ -1,0 +1,90 @@
+"""Request-frequency estimation and metrics aggregation.
+
+The paper's Algorithm 1 consumes f_t — "request frequency at time t". We
+estimate it two ways (selectable): a sliding count window (matches the
+paper's 'requests per 180 s' load metric) and an EWMA of instantaneous rate
+(smoother under bursts); plus percentile aggregation for the evaluation.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence
+
+
+class FrequencyEstimator:
+    def __init__(self, window_s: float = 180.0, mode: str = "window", halflife_s: float = 5.0):
+        self.window_s = window_s
+        self.mode = mode
+        self.halflife_s = halflife_s
+        self._times: Deque[float] = deque()
+        self._rate = 0.0
+        self._last_t: Optional[float] = None
+
+    def observe(self, t: float) -> None:
+        self._times.append(t)
+        cutoff = t - self.window_s
+        while self._times and self._times[0] < cutoff:
+            self._times.popleft()
+        if self._last_t is not None:
+            dt = max(t - self._last_t, 1e-9)
+            inst = 1.0 / dt
+            alpha = 1.0 - 0.5 ** (dt / self.halflife_s)
+            self._rate += alpha * (inst - self._rate)
+        self._last_t = t
+
+    def frequency(self, t: float) -> float:
+        """f_t: requests per window (paper's unit: sessions / 180 s)."""
+        if self.mode == "ewma":
+            return self._rate * self.window_s
+        cutoff = t - self.window_s
+        while self._times and self._times[0] < cutoff:
+            self._times.popleft()
+        return float(len(self._times))
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    k = min(len(s) - 1, max(0, int(math.ceil(p / 100.0 * len(s))) - 1))
+    return s[k]
+
+
+@dataclass
+class Metrics:
+    """Aggregates matching the paper's figures: failed rate, session length,
+    response time (median/p95), per-tier breakdowns."""
+
+    completed: List = field(default_factory=list)
+    failed: List = field(default_factory=list)
+
+    def record(self, req) -> None:
+        (self.failed if req.failed else self.completed).append(req)
+
+    @property
+    def total(self) -> int:
+        return len(self.completed) + len(self.failed)
+
+    @property
+    def failure_rate(self) -> float:
+        return len(self.failed) / self.total if self.total else 0.0
+
+    def response_times(self, tier=None) -> List[float]:
+        return [
+            r.response_s
+            for r in self.completed
+            if r.response_s is not None and (tier is None or r.tier == tier)
+        ]
+
+    def summary(self) -> Dict[str, float]:
+        rts = self.response_times()
+        return {
+            "total": self.total,
+            "failed": len(self.failed),
+            "failure_rate": round(self.failure_rate, 4),
+            "median_response_s": round(percentile(rts, 50), 4) if rts else float("nan"),
+            "p95_response_s": round(percentile(rts, 95), 4) if rts else float("nan"),
+            "mean_response_s": round(sum(rts) / len(rts), 4) if rts else float("nan"),
+        }

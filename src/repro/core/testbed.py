@@ -1,0 +1,77 @@
+"""The paper's hybrid testbed, as simulator configuration.
+
+Calibration targets (paper §III):
+  * Xception: 110.9 MB weights, 109.4 ms inference.
+  * Flask/IIS: single-threaded, 50 s timeout; failure knee ~1200-1300
+    sessions/180 s; lowest response time at low load (Fig 4, Fig 8).
+  * Docker: RESTful with container-activation overhead (Fig 8).
+  * Lambda: median response 300-500 ms up to 6000 sessions/180 s; failure
+    rate up to ~60% at 6000 for the 2 GB class, lower for 3 GB (Fig 5).
+
+The TPU analogue maps tiers onto slices (DESIGN.md §2); service times come
+from the estimator. `paper_tiers()` gives the calibrated testbed used by the
+fig4/5/6/7/8 benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.estimator import AppProfile, SliceProfile, xception_profile
+from repro.core.request import Tier
+from repro.core.tiers import TierConfig, TierSim
+
+
+def paper_tiers(
+    app: AppProfile = None,
+    seed: int = 0,
+    elastic_mem: str = "3GB",
+    interactive_workers: int = 1,
+    docker_workers: int = 4,
+) -> Dict[Tier, TierSim]:
+    """Tier set calibrated to the paper's testbed behaviour."""
+    app = app or xception_profile()
+    rng = np.random.default_rng(seed)
+
+    # Interactive (Flask/IIS on the local web server, Xeon E-2176M): CPU-class
+    # speed calibrated so Xception ~= the paper's 109.4 ms inference + server
+    # overhead -> knee at ~180/0.14 ~= 1286 sessions/180 s (paper: 1200-1300).
+    flask = TierConfig(
+        tier=Tier.FLASK,
+        slice_=SliceProfile(chips=1, name="interactive-cpu", speed_factor=3.6e-4),
+        n_workers=interactive_workers,
+        queue_cap=96,                 # IIS connection backlog analogue
+        activation_s=0.02,            # WFastCgi dispatch
+        net_bw=200e6,                 # local: negligible upload cost
+    )
+    # Batch (Docker containers on the in-house GPU node): faster per request
+    # but pays container-activation overhead per request (paper Fig 8).
+    docker = TierConfig(
+        tier=Tier.DOCKER,
+        slice_=SliceProfile(chips=1, name="batch-gpu-node", speed_factor=2.4e-3),
+        n_workers=docker_workers,
+        queue_cap=512,
+        activation_s=0.35,
+        net_bw=50e6,
+    )
+    # Elastic (Lambda): per-request instances; the memory class trades failure
+    # rate and speed for cost. freq_capacity sets where resource contention
+    # bites: 2 GB fails ~60% at 6000 sessions/180 s, 3 GB much less (Fig 5a).
+    mem = {"2GB": (2800, 1.6, 1.1e-4), "3GB": (5200, 1.6, 1.6e-4)}[elastic_mem]
+    cap, slope, speed = mem
+    serverless = TierConfig(
+        tier=Tier.SERVERLESS,
+        slice_=SliceProfile(chips=1, name=f"elastic-{elastic_mem}", alloc_s=0.25, speed_factor=speed),
+        concurrency_limit=3000,
+        freq_capacity=cap,
+        overload_fail_slope=slope,
+        warm_expiry_s=60.0,
+        activation_s=0.05,
+        net_bw=50e6,
+    )
+    return {
+        Tier.FLASK: TierSim(flask, app, rng),
+        Tier.DOCKER: TierSim(docker, app, rng),
+        Tier.SERVERLESS: TierSim(serverless, app, rng),
+    }

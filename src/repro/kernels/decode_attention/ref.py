@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for fused GQA decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: (B, KV, G, hd); k/v: (B, KV, T, hd); lengths: (B,)."""
+    B, KV, G, hd = q.shape
+    T = k.shape[2]
+    s = jnp.einsum("bkgh,bkth->bkgt", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (hd ** 0.5)
+    mask = jnp.arange(T)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgt,bkth->bkgh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

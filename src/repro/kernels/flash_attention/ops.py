@@ -1,0 +1,37 @@
+"""Jit'd model-facing wrapper: (B, S, H, hd) layout + padding + layout swap.
+
+``interpret`` defaults to True because this container is CPU-only; on TPU
+set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def flash_attention(q, k, v, pos_q=None, pos_k=None, bq: int = 128, bkv: int = 128):
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd) -> (B, S, H, hd). Standard
+    causal positions (the model's train/prefill path)."""
+    B, S, H, hd = q.shape
+    bq = min(bq, S)
+    bkv = min(bkv, S)
+    pad = (-S) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    o = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        bq=bq,
+        bkv=bkv,
+        interpret=_INTERPRET,
+    )
+    o = o.transpose(0, 2, 1, 3)
+    return o[:, :S] if pad else o

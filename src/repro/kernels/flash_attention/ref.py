@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention (causal, GQA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """q: (B, H, S, hd); k/v: (B, KV, S, hd) -> (B, H, S, hd), fp32 softmax."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bkth->bkgqt", qg, kf) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqt,bkth->bkgqh", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Oracle: the sequential mLSTM recurrence (models/xlstm.py)."""
+from repro.models.xlstm import mlstm_sequential  # noqa: F401

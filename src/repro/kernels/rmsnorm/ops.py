@@ -1,0 +1,24 @@
+"""Model-facing wrapper: arbitrary leading dims + row padding."""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_2d
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block = 256
+    while rows % block != 0 and block > 1:
+        block //= 2
+    out = rmsnorm_2d(x2, w, eps=eps, block_rows=block, interpret=_INTERPRET)
+    return out.reshape(shape)

@@ -1,0 +1,2 @@
+"""Oracle: models/common.rmsnorm."""
+from repro.models.common import rmsnorm as rmsnorm_ref  # noqa: F401

@@ -1,0 +1,260 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init. Each cell lowers the real train/serve step against ShapeDtypeStruct
+stand-ins (no allocation), compiles for the production mesh, and records:
+
+  * memory_analysis()      — per-device bytes (proves it fits)
+  * cost_analysis()        — XLA's own numbers (loop bodies counted once)
+  * HloCost(...)           — trip-count-corrected flops / HBM bytes /
+                             per-collective wire bytes (launch/hlo_analysis)
+  * roofline terms         — compute / memory / collective seconds + bound
+  * MODEL_FLOPS            — 6*N*D convention + useful-compute ratio
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --outdir benchmarks/results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# Per-arch dry-run policies (documented in EXPERIMENTS.md §Dry-run):
+#   opt_dtype  — optimizer-state dtype needed to fit HBM at this scale
+#   kv_quant   — int8 KV for decode shapes (qwen1.5-32b: bf16 KV would need
+#                21.5 GB/chip > 16 GB; int8 is the feasibility baseline)
+POLICY = {
+    "llama4-maverick-400b-a17b": {"opt_dtype": "int8"},
+    "jamba-1.5-large-398b": {"opt_dtype": "bfloat16"},
+    "dbrx-132b": {"opt_dtype": "float32"},
+    "qwen1.5-32b": {"kv_quant_decode": True},
+}
+
+# Optional perf overrides applied on top of the baseline (see §Perf log);
+# selected with --variant. Each maps cfg -> cfg.
+VARIANTS = {
+    "w8": lambda cfg, spec: cfg.replace(weights_int8=True),
+    "moetok": lambda cfg, spec: cfg.replace(moe_token_gather=True),
+    "w8+moetok": lambda cfg, spec: cfg.replace(weights_int8=True, moe_token_gather=True),
+    "sbf16": lambda cfg, spec: cfg.replace(attn_scores_bf16=True),
+    "remat0": lambda cfg, spec: cfg.replace(remat="none"),
+    "sp": lambda cfg, spec: cfg.replace(seq_shard_activations=True),
+    "sbf16+remat0": lambda cfg, spec: cfg.replace(attn_scores_bf16=True, remat="none"),
+    "sbf16+sp": lambda cfg, spec: cfg.replace(attn_scores_bf16=True, seq_shard_activations=True),
+    "kvbf16": lambda cfg, spec: cfg.replace(kv_quant=False),
+    "unroll": lambda cfg, spec: cfg.replace(scan_unroll=cfg.n_superblocks),
+    "mb4": lambda cfg, spec: cfg,   # microbatches handled in run_cell
+    "mb4+sbf16": lambda cfg, spec: cfg.replace(attn_scores_bf16=True),
+}
+
+
+def adjust_config(cfg, shape_spec, variant: str = ""):
+    """Shape-dependent knobs: bound transient attention scores ~<=1.5GB/device."""
+    kind = shape_spec.kind
+    pol = POLICY.get(cfg.name, {})
+    if kind == "decode" and pol.get("kv_quant_decode"):
+        cfg = cfg.replace(kv_quant=True)
+    if kind in ("train", "prefill"):
+        # est per-device score bytes: B_local * H * chunk * S * 4
+        dp = 16
+        b_local = max(1, shape_spec.global_batch // dp)
+        S = shape_spec.seq_len
+        H = cfg.n_heads
+        chunk = cfg.attn_chunk
+        while chunk > 128 and b_local * H * chunk * S * 4 > 1.5e9:
+            chunk //= 2
+        if chunk != cfg.attn_chunk:
+            cfg = cfg.replace(attn_chunk=chunk)
+    if kind != "train":
+        cfg = cfg.replace(remat="none")
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, variant: str = "") -> dict:
+    from repro.configs.registry import get_config, skip_reason
+    from repro.configs.shapes import SHAPES
+    from repro.launch.flops import model_flops
+    from repro.launch.hlo_analysis import HloCost, roofline_terms
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_decode, lower_prefill, lower_train
+    from repro.models import get_model
+    from repro.sharding.axes import make_ctx
+    from repro.train.optimizer import OptConfig
+
+    spec = SHAPES[shape_name]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "status": "ok",
+    }
+    skip = skip_reason(arch, shape_name)
+    if skip:
+        rec["status"] = "skip"
+        rec["reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh)
+    n_dev = ctx.n_devices
+    cfg = adjust_config(get_config(arch), spec, variant)
+    if variant:
+        assert variant in VARIANTS, (variant, list(VARIANTS))
+        cfg = VARIANTS[variant](cfg, spec)
+    model = get_model(cfg)
+
+    t0 = time.time()
+    if spec.kind == "train":
+        ocfg = OptConfig(state_dtype=POLICY.get(arch, {}).get("opt_dtype", "float32"))
+        rec["opt_dtype"] = ocfg.state_dtype
+        mb = 4 if variant.startswith("mb4") else 1
+        lowered = lower_train(model, ctx, spec, ocfg, microbatches=mb)
+    elif spec.kind == "prefill":
+        lowered = lower_prefill(model, ctx, spec)
+    else:
+        rec["kv_quant"] = bool(cfg.kv_quant)
+        lowered = lower_decode(model, ctx, spec)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    rec["lower_s"] = round(t1 - t0, 1)
+    rec["compile_s"] = round(t2 - t1, 1)
+    # Analytic per-device param bytes (for the CPU-backend f32-upcast temp
+    # adjustment documented in EXPERIMENTS.md §Dry-run: CPU lowers bf16 dots
+    # via hoisted f32 weight converts; TPU MXU consumes bf16 directly).
+    from repro.models.common import ParamDef
+    from repro.sharding.axes import Rules
+
+    rules = Rules(ctx, fsdp_params=(spec.kind == "train"))
+
+    def _leaf_bytes(d):
+        n = int(np.prod(d.shape))
+        sp = rules.spec_for(d)
+        shards = 1
+        for ax in sp:
+            if ax is not None:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                for a in axes:
+                    shards *= ctx.mesh.shape[a]
+        return n * jnp.dtype(cfg.param_dtype).itemsize / shards
+
+    pdefs = model.param_defs()
+    rec["params_bytes_per_dev"] = int(
+        sum(
+            _leaf_bytes(d)
+            for d in jax.tree.leaves(pdefs, is_leaf=lambda x: isinstance(x, ParamDef))
+        )
+    )
+    rec["mem"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "per_device_total": int(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes
+        ),
+    }
+    try:
+        ca = compiled.cost_analysis()
+        rec["xla_cost"] = {"flops": ca.get("flops", 0.0), "bytes": ca.get("bytes accessed", 0.0)}
+    except Exception as e:  # pragma: no cover
+        rec["xla_cost"] = {"error": str(e)}
+
+    txt = compiled.as_text()
+    t3 = time.time()
+    hc = HloCost(txt, n_dev)
+    cost = hc.cost()
+    rec["analyze_s"] = round(time.time() - t3, 1)
+    rec["hlo_bytes"] = len(txt)
+    rec["cost"] = {
+        "flops_per_dev": cost["flops"],
+        "mem_lo_bytes_per_dev": cost["mem_lo_bytes"],
+        "mem_bytes_per_dev": cost["mem_bytes"],
+        "coll_wire_bytes_per_dev": cost["coll_bytes"],
+        "coll_by_type": cost["coll"],
+        "n_collectives": cost["n_coll"],
+        "while_trips": hc.while_trips[:32],
+    }
+    rec["roofline"] = roofline_terms(cost)
+    mf = model_flops(model, spec)
+    rec["model_flops_global"] = mf
+    hlo_global = cost["flops"] * n_dev
+    rec["useful_compute_ratio"] = (mf / hlo_global) if hlo_global else 0.0
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--outdir", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.registry import list_archs
+    from repro.configs.shapes import SHAPES
+
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{'multi' if mp else 'single'}__{arch}__{shape}"
+                tag += f"__{args.variant}" if args.variant else ""
+                path = outdir / f"{tag}.json"
+                if path.exists() and not args.force:
+                    print(f"CACHED {tag}")
+                    continue
+                print(f"RUN    {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, args.variant)
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures += 1
+                path.write_text(json.dumps(rec, indent=1))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f" bound={r['bound']} c={r['compute_s']*1e3:.2f}ms "
+                        f"m={r['memory_s']*1e3:.2f}ms k={r['collective_s']*1e3:.2f}ms "
+                        f"memGB={rec['mem']['per_device_total']/1e9:.2f} "
+                        f"useful={rec['useful_compute_ratio']:.2f}"
+                    )
+                print(f"DONE   {tag}: {status}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

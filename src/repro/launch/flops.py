@@ -1,0 +1,69 @@
+"""MODEL_FLOPS conventions (roofline 'useful compute' numerator).
+
+train:   6 * N_active * tokens      (fwd 2ND + bwd 4ND)
+prefill: 2 * N_active * tokens
+decode:  2 * N_active * global_batch
+
+N_active excludes the embedding table; MoE expert weights count at
+top_k / n_experts. Enc-dec counts encoder params against encoder tokens
+(B * n_ctx) and decoder params against decoder tokens separately.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.models.common import ModelConfig, ParamDef
+
+
+def _count(defs, cfg: ModelConfig, prefix=""):
+    total = 0.0
+    active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )[0]
+    for path, d in flat:
+        keys = [str(getattr(k, "key", k)) for k in path]
+        n = float(np.prod(d.shape))
+        if "embedding" in keys:
+            total += n
+            continue  # excluded from N
+        total += n
+        frac = 1.0
+        if cfg.moe is not None and any("_ffn" == k[-4:] and k.startswith("l") for k in keys):
+            lkey = next(k for k in keys if k.endswith("_ffn"))
+            pos = int(lkey[1:-4])
+            if cfg.layer_has_moe(pos) and keys[-1] in ("w1", "w2", "w3"):
+                frac = cfg.moe.top_k / cfg.moe.n_experts
+        active += n * frac
+    return total, active
+
+
+def active_params(model) -> float:
+    cfg = model.cfg
+    defs = model.param_defs()
+    if cfg.encoder is not None:
+        _, a_dec = _count(defs["decoder"], cfg)
+        _, a_enc = _count(defs["encoder"], cfg)
+        return a_dec, a_enc
+    _, a = _count(defs, cfg)
+    return a, 0.0
+
+
+def model_flops(model, shape_spec) -> float:
+    cfg = model.cfg
+    a_dec, a_enc = active_params(model)
+    B, S = shape_spec.global_batch, shape_spec.seq_len
+    if shape_spec.kind == "train":
+        f = 6.0 * a_dec * B * S
+        if cfg.encoder is not None:
+            f += 6.0 * a_enc * B * cfg.encoder.n_ctx
+        return f
+    if shape_spec.kind == "prefill":
+        f = 2.0 * a_dec * B * S
+        if cfg.encoder is not None:
+            f += 2.0 * a_enc * B * cfg.encoder.n_ctx
+        return f
+    if shape_spec.kind == "decode":
+        return 2.0 * a_dec * B
+    raise ValueError(shape_spec.kind)

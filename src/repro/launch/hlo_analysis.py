@@ -1,0 +1,415 @@
+"""Exact-ish cost accounting over compiled HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in
+scripts/probe_xla.py), which would undercount scan-over-layers models by the
+layer count. This analyzer parses the post-SPMD HLO text, builds the
+computation call graph, reads ``known_trip_count`` off every while op, and
+multiplies body costs through — yielding per-device:
+
+  * flops            — 2*M*N*K for every dot (incl. inside fusions/loops)
+  * mem_bytes        — sum of (operands + outputs) of top-level ops per
+                       computation, fusions counted as single kernels (a
+                       standard HBM-traffic model post-fusion)
+  * collective wire bytes — ring-model per-device bytes per collective type:
+        all-reduce      2*b*(g-1)/g        all-gather     out*(g-1)/g
+        reduce-scatter  in*(g-1)/g         all-to-all     b*(g-1)/g
+        collective-permute  b
+
+All quantities are PER DEVICE (the SPMD module is the per-device program);
+roofline terms divide by per-chip peaks, which matches the global formula
+HLO_total / (chips * peak).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_op_line(line: str):
+    """'%name = TYPE opcode(args), attrs' -> (name, type_str, opcode, rest).
+    TYPE may be a tuple '(T1, T2, ...)' possibly containing /*index=N*/
+    comments; attrs may contain '=' freely."""
+    s = _COMMENT_RE.sub("", line).strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3 :]
+    if rest.startswith("("):
+        depth = 0
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, tail = rest[: i + 1], rest[i + 1 :].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp + 1 :].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", tail)
+    if not m:
+        return None
+    return name, type_str, m.group(1), m.group(2)
+def _comp_header(line: str) -> Optional[str]:
+    """Computation headers are lines like '%name (args...) -> type {' (or with
+    a leading ENTRY). Arg/ret types contain nested braces, so match loosely."""
+    s = line.strip()
+    if not s.endswith("{") or "->" not in s or "=" in s.split("(")[0]:
+        return None
+    tok = s.split("(")[0].strip()
+    if tok.startswith("ENTRY"):
+        tok = tok[len("ENTRY"):].strip()
+    if not tok:
+        return None
+    return tok.lstrip("%") or None
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(t: str) -> int:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def _first_shape_dims(t: str) -> List[int]:
+    m = _SHAPE_RE.search(t)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # args + attrs tail of the line
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symtab: Dict[str, str] = field(default_factory=dict)  # op name -> type str
+    by_name: Dict[str, Op] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            name = _comp_header(line)
+            if name:
+                cur = Computation(name)
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            parsed = _parse_op_line(line)
+            if parsed is None:
+                continue
+            name, type_str, opcode, rest = parsed
+            op = Op(name, type_str, opcode, rest)
+            op.operands = re.findall(r"%([\w.\-]+)", rest.split(")", 1)[0])
+            cur.symtab[op.name] = op.type_str
+            cur.by_name[op.name] = op
+            cur.ops.append(op)
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _type_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if not m:
+        return 0.0
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs = op.operands[0] if op.operands else None
+    lhs_t = comp.symtab.get(lhs, "")
+    dims = _first_shape_dims(lhs_t)
+    k = 1
+    for c in cdims:
+        if c < len(dims):
+            k *= dims[c]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems = _type_elems(op.type_str)
+    if len(op.operands) < 2:
+        return 0.0
+    ker = _first_shape_dims(comp.symtab.get(op.operands[1], ""))
+    k = 1
+    for d in ker[:-1]:  # all but output-feature dim (approximate)
+        k *= d
+    return 2.0 * out_elems * k
+
+
+def _group_size(op: Op, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.rest)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    return sum(_type_bytes(comp.symtab.get(o, "")) for o in op.operands)
+
+
+# HBM-traffic model: count operand+output bytes only for ops that would be
+# kernel/materialization boundaries on TPU (elementwise chains, converts,
+# broadcasts, reshapes fuse into their consumers and are NOT counted).
+_MEM_OP_PREFIXES = (
+    "dot", "convolution", "fusion", "custom-call", "copy",
+    "dynamic-update-slice", "dynamic-slice", "gather", "scatter",
+    "reduce", "sort", "select-and-scatter", "rng", "pad", "concatenate",
+    "cholesky", "triangular-solve",
+) + COLLECTIVES
+
+
+def _is_mem_op(opcode: str) -> bool:
+    return any(opcode.startswith(p) for p in _MEM_OP_PREFIXES) and not opcode.endswith("-done")
+
+
+def _collective_wire(op: Op, comp: Computation, g: int) -> float:
+    out_b = _type_bytes(op.type_str)
+    in_b = _operand_bytes(op, comp)
+    frac = (g - 1) / g if g > 1 else 0.0
+    oc = op.opcode
+    if oc.startswith("all-reduce"):
+        return 2.0 * out_b * frac
+    if oc.startswith("all-gather"):
+        return out_b * frac
+    if oc.startswith("reduce-scatter"):
+        return in_b * frac
+    if oc.startswith("all-to-all"):
+        return out_b * frac
+    if oc.startswith("collective-permute"):
+        return float(out_b)
+    return 0.0
+
+
+class HloCost:
+    def __init__(self, text: str, total_devices: int):
+        self.comps, self.entry = parse_hlo(text)
+        self.total_devices = total_devices
+        self._memo: Dict[str, dict] = {}
+        self.while_trips: List[Tuple[str, int]] = []
+
+    def _trip_count(self, op: Op) -> int:
+        m = re.search(r'known_trip_count[^\d]*(\d+)', op.rest)
+        return int(m.group(1)) if m else 1
+
+    def _is_pure_convert_fusion(self, op: Op, comp: Computation) -> bool:
+        """Element-preserving single-source fusions (convert / transpose+
+        convert / copy chains — CPU's f32 upcasts and int8 dequants): on TPU
+        the consumer streams the SOURCE from HBM (bf16/int8 native), so
+        traffic is charged at the source dtype by _src_bytes. Structural
+        test: exactly one operand within 4x of the output size, and equal
+        element counts (scales/indices in dequant fusions are tiny)."""
+        if op.opcode != "fusion":
+            return False
+        out_b = _type_bytes(op.type_str)
+        big = [
+            o for o in op.operands
+            if _type_bytes(comp.symtab.get(o, "")) > max(4, out_b // 4)
+        ]
+        return len(big) == 1 and _type_elems(op.type_str) == _type_elems(
+            comp.symtab.get(big[0], "")
+        )
+
+    def _src_bytes(self, comp: Computation, name: str, depth: int = 0) -> float:
+        """Bytes actually streamed from HBM for an operand: trace through
+        converts / pure-convert fusions / layout ops back to the source."""
+        op = comp.by_name.get(name)
+        if op is None or depth > 4:
+            return float(_type_bytes(comp.symtab.get(name, "")))
+        if op.opcode in ("convert", "bitcast", "copy", "transpose", "reshape") and op.operands:
+            return self._src_bytes(comp, op.operands[0], depth + 1)
+        if self._is_pure_convert_fusion(op, comp):
+            big = [o for o in op.operands if _type_bytes(comp.symtab.get(o, "")) > 4]
+            return self._src_bytes(comp, big[0], depth + 1)
+        return float(_type_bytes(comp.symtab.get(name, "")))
+
+    def _op_traffic(self, op: Op, comp: Computation) -> float:
+        """HBM bytes for one op. Slicing ops touch only the slice; fusions
+        with dynamic-slice'd parameters touch only the slices (XLA fuses the
+        slice into the kernel, the full operand is never streamed)."""
+        oc = op.opcode
+        out_b = _type_bytes(op.type_str)
+        if oc in ("dot", "convolution"):
+            return out_b + sum(self._src_bytes(comp, o) for o in op.operands)
+        if oc == "fusion" and self._is_pure_convert_fusion(op, comp):
+            return 0.0  # charged at the consuming dot via _src_bytes
+        if oc.startswith(("dynamic-slice", "slice", "gather")):
+            return 2.0 * out_b
+        if oc.startswith("dynamic-update-slice"):
+            upd = _type_bytes(comp.symtab.get(op.operands[1], "")) if len(op.operands) > 1 else out_b
+            return 2.0 * upd
+        if oc.startswith("scatter"):
+            upd = _type_bytes(comp.symtab.get(op.operands[-1], "")) if op.operands else out_b
+            return 3.0 * upd
+        if oc == "fusion":
+            mc = re.search(r"calls=%?([\w.\-]+)", op.rest)
+            fc = self.comps.get(mc.group(1)) if mc else None
+            if fc is None:
+                return out_b + _operand_bytes(op, comp)
+            # map parameter index -> consumers inside the fused computation
+            pname_by_idx = {}
+            for fop in fc.ops:
+                if fop.opcode == "parameter":
+                    mi = re.match(r"(\d+)", fop.rest)
+                    if mi:
+                        pname_by_idx[int(mi.group(1))] = fop.name
+            total = float(out_b)
+            for i, operand in enumerate(op.operands):
+                pb = _type_bytes(comp.symtab.get(operand, ""))
+                pn = pname_by_idx.get(i)
+                if pn is not None:
+                    consumers = [f for f in fc.ops if pn in f.operands and f.opcode != "parameter"]
+                    if consumers and all(
+                        f.opcode.startswith(("dynamic-slice", "slice", "gather")) for f in consumers
+                    ):
+                        pb = sum(_type_bytes(f.type_str) for f in consumers)
+                total += pb
+            return total
+        return out_b + _operand_bytes(op, comp)
+
+    def _called(self, op: Op) -> List[Tuple[str, float, bool]]:
+        """(callee, multiplier, flops_only)."""
+        out = []
+        if op.opcode == "while":
+            trip = self._trip_count(op)
+            mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+            if mb:
+                out.append((mb.group(1), float(trip), False))
+                self.while_trips.append((mb.group(1), trip))
+        elif op.opcode == "fusion":
+            mc = re.search(r"calls=%?([\w.\-]+)", op.rest)
+            if mc:
+                out.append((mc.group(1), 1.0, True))  # flops only: fusion = 1 kernel
+        elif op.opcode in ("call", "conditional", "custom-call"):
+            for mm in re.finditer(r"(?:to_apply|calls|branch_computations=\{?)=?%?([\w.\-]+)", op.rest):
+                name = mm.group(1)
+                if name in self.comps:
+                    out.append((name, 1.0, False))
+        return out
+
+    def cost(self, comp_name: Optional[str] = None) -> dict:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        z = {"flops": 0.0, "mem_bytes": 0.0, "mem_lo_bytes": 0.0, "coll_bytes": 0.0,
+             "coll": {c: 0.0 for c in COLLECTIVES}, "n_coll": 0}
+        if comp is None:
+            return z
+        self._memo[comp_name] = z  # guard cycles
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                z["flops"] += _dot_flops(op, comp)
+            elif oc == "convolution":
+                z["flops"] += _conv_flops(op, comp)
+            if _is_mem_op(oc):
+                t = self._op_traffic(op, comp)
+                z["mem_bytes"] += t
+                # mem_lo: assume TPU fuses elementwise chains — skip fusion
+                # kernels; dots/data-movement/collectives stay HBM-bound.
+                if oc != "fusion":
+                    z["mem_lo_bytes"] += t
+            base = next((c for c in COLLECTIVES if oc == c or oc == c + "-start"), None)
+            if base is not None:
+                g = _group_size(op, self.total_devices)
+                w = _collective_wire(op, comp, g)
+                z["coll_bytes"] += w
+                z["coll"][base] += w
+                z["n_coll"] += 1
+            for callee, mult, flops_only in self._called(op):
+                sub = self.cost(callee)
+                z["flops"] += mult * sub["flops"]
+                if not flops_only:
+                    z["mem_bytes"] += mult * sub["mem_bytes"]
+                    z["mem_lo_bytes"] += mult * sub["mem_lo_bytes"]
+                    z["coll_bytes"] += mult * sub["coll_bytes"]
+                    z["n_coll"] += int(mult * sub["n_coll"])
+                    for c in COLLECTIVES:
+                        z["coll"][c] += mult * sub["coll"][c]
+        return z
+
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+
+def roofline_terms(cost: dict) -> dict:
+    """memory term uses the TPU-fused model (mem_lo); mem_hi (CPU-backend
+    fusion boundaries) is reported alongside as the upper bound."""
+    ct = cost["flops"] / PEAK_FLOPS
+    mt = cost.get("mem_lo_bytes", cost["mem_bytes"]) / HBM_BW
+    mt_hi = cost["mem_bytes"] / HBM_BW
+    kt = cost["coll_bytes"] / LINK_BW
+    dom = max((ct, "compute"), (mt, "memory"), (kt, "collective"))[1]
+    return {
+        "compute_s": ct,
+        "memory_s": mt,
+        "memory_hi_s": mt_hi,
+        "collective_s": kt,
+        "bound": dom,
+        "step_s_lower_bound": max(ct, mt, kt),
+    }

@@ -1,0 +1,25 @@
+"""Production meshes. Import must never touch jax device state — meshes are
+built only inside functions."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16, 16) over ('data', 'model').
+    Multi-pod: 2 pods = 512 chips (2, 16, 16) over ('pod', 'data', 'model');
+    'pod' extends data parallelism across the inter-pod links (DCN/ICI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_tier_mesh(n_devices: int, tp: int = 1):
+    """Small serving-tier meshes (interactive/elastic slices). Uses the first
+    n_devices available devices; data x model layout."""
+    assert n_devices % tp == 0
+    devs = jax.devices()[:n_devices]
+    import numpy as np
+
+    arr = np.array(devs).reshape(n_devices // tp, tp)
+    return jax.sharding.Mesh(arr, ("data", "model"))

@@ -1,0 +1,79 @@
+"""Serving launcher: StraightLine router over live engine tiers.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --requests 32 [--F 10] [--D 4096] [--weights-int8]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--F", type=float, default=10.0, help="frequency threshold")
+    ap.add_argument("--D", type=float, default=4096.0, help="data-size threshold (bytes)")
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--weights-int8", action="store_true")
+    ap.add_argument("--hedge-after", type=float, default=None)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.core import Request, StraightLinePolicy, Thresholds, Tier
+    from repro.core.router import Backend, StraightLineRouter
+    from repro.models.quant import quantize_params
+    from repro.serving.engine import EngineConfig, InferenceEngine
+
+    cfg = get_config(args.arch, smoke=True).replace(attn_chunk=64)
+    t0 = time.time()
+    interactive = InferenceEngine(cfg, EngineConfig(max_slots=1, max_len=96, max_new_tokens=args.max_new_tokens))
+    params = interactive.params
+    if args.weights_int8:
+        cfg_q = cfg.replace(weights_int8=True)
+        params = quantize_params(params)
+        interactive = InferenceEngine(cfg_q, EngineConfig(max_slots=1, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
+        cfg = cfg_q
+    batch_tier = InferenceEngine(cfg, EngineConfig(max_slots=4, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
+    elastic: list = []
+    print(f"tiers ready in {time.time()-t0:.1f}s (weights_int8={args.weights_int8})")
+
+    def run_on(engine):
+        def run(req):
+            prompt = list(np.random.default_rng(req.rid).integers(1, cfg.vocab_size, 8))
+            return engine.generate([prompt])[0].out
+        return run
+
+    def elastic_run(req):
+        if not elastic:
+            t = time.time()
+            elastic.append(InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=96, max_new_tokens=args.max_new_tokens), params=params))
+            print(f"  [elastic cold start {time.time()-t:.1f}s]")
+        return run_on(elastic[0])(req)
+
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8),
+            Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, elastic_run, capacity=16),
+        },
+        policy=StraightLinePolicy(Thresholds(F=args.F, D=args.D)),
+        window_s=10.0,
+        hedge_after_s=args.hedge_after,
+    )
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        size = float(rng.choice([512.0, 16384.0], p=[0.8, 0.2]))
+        router.submit(Request(rid=i, arrival_t=0.0, data_size=size, timeout_s=300.0))
+    router.drain()
+    m = router.metrics
+    by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
+    print(f"{args.requests} requests: {m.summary()}")
+    print(f"placement: {by_tier}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Jitted step builders + sharding trees for params / optimizer / batch / cache.
+
+All shardings come from one place so the trainer, the serving engine and the
+dry-run launcher lower the exact same programs.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamDef
+from repro.sharding.axes import MeshCtx, Rules
+from repro.train.optimizer import OptConfig, adamw_update, opt_state_shapes
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(model, ctx: Optional[MeshCtx], fsdp: bool):
+    rules = Rules(ctx, fsdp_params=fsdp)
+    return rules.sharding_tree(model.param_defs())
+
+
+def _ns(ctx, spec: P):
+    return NamedSharding(ctx.mesh, spec) if ctx is not None else None
+
+
+def batch_shardings(ctx: Optional[MeshCtx], input_specs: Mapping, global_batch: int):
+    if ctx is None:
+        return {k: None for k in input_specs}
+    out = {}
+    for name, sds in input_specs.items():
+        shp = sds.shape
+        if name == "positions" and len(shp) == 3:
+            out[name] = _ns(ctx, P(None, ctx.batch_spec_for(shp[1]), None))
+        elif len(shp) >= 1 and shp and shp[0] == global_batch:
+            out[name] = _ns(ctx, P(ctx.batch_spec_for(shp[0]), *([None] * (len(shp) - 1))))
+        else:
+            out[name] = _ns(ctx, P(*([None] * len(shp))))
+    return out
+
+
+def cache_shardings(ctx: Optional[MeshCtx], cache_defs: Any):
+    """Decode caches: axis1 = batch; KV seq (attn) / channel dims (ssm) over TP."""
+    if ctx is None:
+        return jax.tree.map(lambda s: None, cache_defs)
+    tp = ctx.tp_axis
+    tpn = ctx.tp_size
+
+    def spec(path, leaf):
+        keys = [getattr(k, "key", "") for k in path]
+        name = keys[-1] if keys else ""
+        parent = keys[-2] if len(keys) >= 2 else ""
+        nd = len(leaf.shape)
+        ax = [None] * nd
+        if nd >= 2:
+            ax[1] = ctx.batch_spec_for(leaf.shape[1])
+        if "cross" in parent:
+            pass  # (n_sb, B, T_enc, H, hd): only batch-sharded (heads rarely divide)
+        elif name in ("k", "v", "k_scale", "v_scale") and nd >= 3:
+            if leaf.shape[2] % tpn == 0:
+                ax[2] = tp
+        elif name == "conv" and nd == 4:
+            if leaf.shape[3] % tpn == 0:
+                ax[3] = tp
+        elif name == "ssm" and nd == 4:
+            if leaf.shape[2] % tpn == 0:
+                ax[2] = tp
+        elif name in ("C", "n", "c", "h") and nd >= 4:
+            if leaf.shape[3] % tpn == 0:
+                ax[3] = tp
+        return NamedSharding(ctx.mesh, P(*ax))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_defs)
+
+
+def opt_shardings(model, ctx: Optional[MeshCtx], ocfg: OptConfig):
+    """ZeRO-1: f32/bf16 states share the (fsdp-extended) param specs; int8
+    blockwise states shard their (n_blocks, 128) layout over all mesh axes."""
+    defs = model.param_defs()
+    if ctx is None:
+        none_tree = jax.tree.map(lambda d: None, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+        if ocfg.state_dtype == "int8":
+            none_tree = jax.tree.map(
+                lambda _: {"q": None, "scale": None}, none_tree, is_leaf=lambda x: x is None
+            )
+        return {"m": none_tree, "v": none_tree, "step": None}
+    rules = Rules(ctx, fsdp_params=True)
+
+    def leaf(d: ParamDef):
+        spec = rules.spec_for(d)
+        if ocfg.state_dtype in ("float32", "bfloat16"):
+            return NamedSharding(ctx.mesh, spec)
+        # int8 states are SHAPE-PRESERVING (optimizer.quantize_blockwise):
+        # q shares the param's spec exactly (no resharding against grads);
+        # the per-block scale drops the last-dim sharding (it is d//block).
+        from repro.train.optimizer import _block_for
+
+        s_spec = list(spec) + [None] * (len(d.shape) - len(spec))
+        if _block_for(d.shape[-1] if d.shape else 1) == 0:
+            s_spec = s_spec + [None]     # unquantizable leaf: scale = value[..., None]
+        else:
+            s_spec[-1] = None
+        return {
+            "q": NamedSharding(ctx.mesh, spec),
+            "scale": NamedSharding(ctx.mesh, P(*s_spec)),
+        }
+
+    tree = jax.tree.map(leaf, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return {"m": tree, "v": tree, "step": NamedSharding(ctx.mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    model, ctx: Optional[MeshCtx], ocfg: OptConfig, schedule=None, microbatches: int = 1
+):
+    """microbatches > 1: gradient accumulation — the global batch is split on
+    axis 0 and scanned, bounding live activations/residuals to one microbatch
+    (how the 400B-class train cells fit HBM; grads accumulate in bf16)."""
+
+    def grad_fn(params, batch):
+        def lf(p):
+            return model.loss(ctx, p, batch)
+
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+                if x.ndim >= 1 and x.shape[0] % microbatches == 0
+                else jnp.broadcast_to(x, (microbatches,) + x.shape),
+                batch,
+            )
+
+            def body(acc, b):
+                (loss, metrics), grads = grad_fn(params, b)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype) / microbatches, acc, grads
+                )
+                return acc, (loss, metrics)
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            grads, (losses, ms) = jax.lax.scan(body, zero, mb)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(axis=0), ms)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        lr = schedule(opt_state["step"]) if schedule is not None else None
+        new_params, new_opt, stats = adamw_update(grads, opt_state, params, ocfg, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, ctx: Optional[MeshCtx], cap: int = 0):
+    def prefill_step(params, batch):
+        return model.prefill(ctx, params, batch, cap=cap)
+
+    return prefill_step
+
+
+def make_decode_step(model, ctx: Optional[MeshCtx]):
+    def decode_step(params, cache, batch):
+        return model.decode(ctx, params, cache, batch)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers (shared by dryrun + launchers)
+# ---------------------------------------------------------------------------
+
+
+def lower_train(model, ctx, shape_spec, ocfg: OptConfig, microbatches: int = 1):
+    pshapes = model.param_shapes()
+    oshapes = opt_state_shapes(pshapes, ocfg)
+    inputs = model.input_specs(shape_spec)
+    psh = param_shardings(model, ctx, fsdp=True)
+    osh = opt_shardings(model, ctx, ocfg)
+    bsh = batch_shardings(ctx, inputs, shape_spec.global_batch)
+    step = make_train_step(model, ctx, ocfg, microbatches=microbatches)
+    jitted = jax.jit(
+        step, in_shardings=(psh, osh, bsh), donate_argnums=(0, 1)
+    )
+    return jitted.lower(pshapes, oshapes, inputs)
+
+
+def _serve_params(model, ctx):
+    """(shapes, shardings) for serving — applies weight-int8 when enabled."""
+    pshapes = model.param_shapes()
+    psh = param_shardings(model, ctx, fsdp=False)
+    if model.cfg.weights_int8:
+        from repro.models.quant import quantized_shape_tree, quantized_sharding_tree
+
+        psh = quantized_sharding_tree(psh, pshapes)
+        pshapes = quantized_shape_tree(pshapes)
+    return pshapes, psh
+
+
+def lower_prefill(model, ctx, shape_spec):
+    pshapes, psh = _serve_params(model, ctx)
+    inputs = model.input_specs(shape_spec)
+    bsh = batch_shardings(ctx, inputs, shape_spec.global_batch)
+    cdefs = model.cache_defs(shape_spec.global_batch, shape_spec.seq_len)
+    csh = cache_shardings(ctx, cdefs)
+    tok_sh = (
+        NamedSharding(ctx.mesh, P(ctx.batch_spec_for(shape_spec.global_batch)))
+        if ctx is not None
+        else None
+    )
+    step = make_prefill_step(model, ctx, cap=shape_spec.seq_len)
+    jitted = jax.jit(step, in_shardings=(psh, bsh), out_shardings=(tok_sh, csh))
+    return jitted.lower(pshapes, inputs)
+
+
+def lower_decode(model, ctx, shape_spec):
+    pshapes, psh = _serve_params(model, ctx)
+    inputs = model.input_specs(shape_spec)
+    bsh = batch_shardings(ctx, inputs, shape_spec.global_batch)
+    cdefs = model.cache_defs(shape_spec.global_batch, shape_spec.seq_len)
+    csh = cache_shardings(ctx, cdefs)
+    tok_sh = (
+        NamedSharding(ctx.mesh, P(ctx.batch_spec_for(shape_spec.global_batch)))
+        if ctx is not None
+        else None
+    )
+    step = make_decode_step(model, ctx)
+    jitted = jax.jit(
+        step, in_shardings=(psh, csh, bsh), out_shardings=(tok_sh, csh), donate_argnums=(1,)
+    )
+    return jitted.lower(pshapes, cdefs, inputs)

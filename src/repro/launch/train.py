@@ -1,0 +1,68 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --steps 100 \
+        [--smoke] [--ckpt-dir DIR] [--microbatches N] [--opt-dtype float32]
+
+Smoke configs execute on this host; FULL configs require the production
+mesh (use repro.launch.dryrun to validate the sharded program first).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--opt-dtype", default="float32", choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--data", default=None, help="token .bin file (default: synthetic)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_config
+    from repro.models import get_model
+    from repro.train.data import DataConfig
+    from repro.train.optimizer import OptConfig
+    from repro.train.schedule import WarmupCosine
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = get_config(args.arch, smoke=args.smoke).replace(attn_chunk=64, ce_chunks=2)
+    model = get_model(cfg)
+    trainer = Trainer(
+        model,
+        None,
+        TrainConfig(
+            steps=args.steps,
+            ckpt_every=args.ckpt_every,
+            ckpt_dir=args.ckpt_dir,
+            log_every=10,
+            opt=OptConfig(lr=args.lr, state_dtype=args.opt_dtype),
+        ),
+        DataConfig(
+            batch_size=args.batch_size,
+            seq_len=args.seq_len,
+            vocab_size=cfg.vocab_size,
+            path=args.data,
+            seed=args.seed,
+        ),
+        schedule=WarmupCosine(peak_lr=args.lr, warmup_steps=max(5, args.steps // 10), total_steps=args.steps),
+    )
+    trainer.install_preemption_handler()
+    r = trainer.run(seed=args.seed)
+    h = r["history"]
+    print(
+        f"{args.arch}: {r['steps_done']} steps in {r['wall_s']:.1f}s | "
+        f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}"
+        + (" | PREEMPTED (checkpoint saved)" if r["preempted"] else "")
+    )
+
+
+if __name__ == "__main__":
+    main()

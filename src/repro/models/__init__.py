@@ -1,0 +1,21 @@
+from repro.models.api import DecoderLM, EmbedsLM, EncDecLM, ShapeSpec, get_model
+from repro.models.common import (
+    EncoderCfg,
+    MambaCfg,
+    MoECfg,
+    ModelConfig,
+    XLSTMCfg,
+)
+
+__all__ = [
+    "DecoderLM",
+    "EmbedsLM",
+    "EncDecLM",
+    "EncoderCfg",
+    "MambaCfg",
+    "MoECfg",
+    "ModelConfig",
+    "ShapeSpec",
+    "XLSTMCfg",
+    "get_model",
+]

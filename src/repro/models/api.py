@@ -1,0 +1,233 @@
+"""Unified model API: one interface over decoder-LM / VLM-backbone / enc-dec.
+
+Everything downstream (trainer, serving engine, dry-run launcher, StraightLine
+estimator) talks to models through this facade:
+
+    model = get_model(cfg)
+    loss, metrics = model.loss(ctx, params, batch)          # train step core
+    tok, cache    = model.prefill(ctx, params, batch)        # serve prefill
+    tok, cache    = model.decode(ctx, params, cache, batch)  # serve decode
+
+``input_specs(shape)`` returns ShapeDtypeStruct stand-ins for every input of
+the corresponding step — the dry-run lowers against these, no allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models import whisper as wh
+from repro.models.common import ModelConfig, init_tree, shape_tree
+from repro.models.loss import lm_loss, next_tokens
+from repro.models.rotary import mrope_positions_for, positions_for
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+def _tok(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+@dataclass
+class DecoderLM:
+    cfg: ModelConfig
+
+    # -- params ------------------------------------------------------------
+    def param_defs(self):
+        return tf.param_defs(self.cfg)
+
+    def init(self, rng):
+        return init_tree(rng, self.param_defs(), self.cfg.param_dtype)
+
+    def param_shapes(self):
+        return shape_tree(self.param_defs(), self.cfg.param_dtype)
+
+    # -- cache ---------------------------------------------------------------
+    def cache_defs(self, batch: int, cap: int):
+        return tf.cache_defs(self.cfg, batch, cap)
+
+    def init_cache(self, batch: int, cap: int):
+        return tf.init_cache(self.cfg, batch, cap)
+
+    # -- steps ---------------------------------------------------------------
+    def _positions(self, batch: int, seq: int, offset=0):
+        if self.cfg.pos == "mrope":
+            return mrope_positions_for(batch, seq, offset)
+        p = positions_for(batch, seq, offset)
+        return jnp.broadcast_to(p, (batch, seq))
+
+    def loss(self, ctx, params, batch: Mapping) -> Tuple[jax.Array, dict]:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = batch.get("positions")
+        if pos is None:
+            pos = self._positions(B, S)
+        h, _, aux = tf.forward(self.cfg, ctx, params, tokens=tokens, positions=pos, mode="train")
+        loss, metrics = lm_loss(self.cfg, ctx, params, h, batch["labels"])
+        if self.cfg.moe is not None:
+            loss = loss + self.cfg.moe.aux_weight * aux
+            metrics["moe_aux"] = aux
+        return loss, metrics
+
+    def prefill(self, ctx, params, batch: Mapping, cap: int = 0):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cap = cap or S
+        pos = batch.get("positions")
+        if pos is None:
+            pos = self._positions(B, S)
+        cache = self.init_cache(B, cap)
+        h, cache, _ = tf.forward(
+            self.cfg, ctx, params, tokens=tokens, positions=pos,
+            mode="prefill", cache=cache, cache_index=0,
+        )
+        return next_tokens(self.cfg, ctx, params, h), cache
+
+    def decode(self, ctx, params, cache, batch: Mapping):
+        tok = batch["token"]
+        B, S = tok.shape
+        # "lengths" (B,) enables per-slot cache positions (continuous
+        # batching); "cache_index" scalar is the aligned-batch/dry-run path.
+        idx = batch.get("lengths", batch["cache_index"])
+        if hasattr(idx, "ndim") and getattr(idx, "ndim", 0) == 1:
+            pos = idx[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+            if self.cfg.pos == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, B, S))
+        else:
+            pos = self._positions(B, S, offset=idx)
+        h, cache, _ = tf.forward(
+            self.cfg, ctx, params, tokens=tok, positions=pos,
+            mode="decode", cache=cache, cache_index=idx,
+        )
+        return next_tokens(self.cfg, ctx, params, h), cache
+
+    # -- dry-run specs ---------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": _tok((B, S)), "labels": _tok((B, S))}
+        if shape.kind == "prefill":
+            return {"tokens": _tok((B, S))}
+        if shape.kind == "decode":
+            return {"token": _tok((B, 1)), "cache_index": _tok(())}
+        raise ValueError(shape.kind)
+
+
+@dataclass
+class EmbedsLM(DecoderLM):
+    """VLM backbone: inputs are precomputed patch/token embeddings (stub frontend)."""
+
+    def loss(self, ctx, params, batch: Mapping):
+        emb = batch["inputs_embeds"]
+        B, S, _ = emb.shape
+        pos = batch.get("positions")
+        if pos is None:
+            pos = self._positions(B, S)
+        h, _, aux = tf.forward(self.cfg, ctx, params, inputs_embeds=emb, positions=pos, mode="train")
+        loss, metrics = lm_loss(self.cfg, ctx, params, h, batch["labels"])
+        return loss, metrics
+
+    def prefill(self, ctx, params, batch: Mapping, cap: int = 0):
+        emb = batch["inputs_embeds"]
+        B, S, _ = emb.shape
+        cap = cap or S
+        pos = batch.get("positions")
+        if pos is None:
+            pos = self._positions(B, S)
+        cache = self.init_cache(B, cap)
+        h, cache, _ = tf.forward(
+            self.cfg, ctx, params, inputs_embeds=emb, positions=pos,
+            mode="prefill", cache=cache, cache_index=0,
+        )
+        return next_tokens(self.cfg, ctx, params, h), cache
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        B, S, d = shape.global_batch, shape.seq_len, self.cfg.d_model
+        emb = jax.ShapeDtypeStruct((B, S, d), self.cfg.compute_dtype)
+        pos = _tok((3, B, S))
+        if shape.kind == "train":
+            return {"inputs_embeds": emb, "positions": pos, "labels": _tok((B, S))}
+        if shape.kind == "prefill":
+            return {"inputs_embeds": emb, "positions": pos}
+        if shape.kind == "decode":
+            return {"token": _tok((B, 1)), "cache_index": _tok(())}
+        raise ValueError(shape.kind)
+
+
+@dataclass
+class EncDecLM(DecoderLM):
+    """Whisper-style enc-dec; frames are stub (precomputed) embeddings."""
+
+    def param_defs(self):
+        return wh.param_defs(self.cfg)
+
+    def cache_defs(self, batch: int, cap: int):
+        return tf.cache_defs(self.cfg, batch, cap, enc_len=self.cfg.encoder.n_ctx)
+
+    def init_cache(self, batch: int, cap: int):
+        return tf.init_cache(self.cfg, batch, cap, enc_len=self.cfg.encoder.n_ctx)
+
+    def loss(self, ctx, params, batch: Mapping):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = self._positions(B, S)
+        h, _, aux = wh.forward(
+            self.cfg, ctx, params, frames=batch["frames"], tokens=tokens,
+            positions=pos, mode="train",
+        )
+        loss, metrics = lm_loss(self.cfg, ctx, params["decoder"], h, batch["labels"])
+        return loss, metrics
+
+    def prefill(self, ctx, params, batch: Mapping, cap: int = 0):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cap = cap or S
+        pos = self._positions(B, S)
+        cache = self.init_cache(B, cap)
+        h, cache, _ = wh.forward(
+            self.cfg, ctx, params, frames=batch["frames"], tokens=tokens,
+            positions=pos, mode="prefill", cache=cache, cache_index=0,
+        )
+        return next_tokens(self.cfg, ctx, params["decoder"], h), cache
+
+    def decode(self, ctx, params, cache, batch: Mapping):
+        tok = batch["token"]
+        B, S = tok.shape
+        idx = batch["cache_index"]
+        pos = self._positions(B, S, offset=idx)
+        h, cache, _ = wh.forward(
+            self.cfg, ctx, params, tokens=tok, positions=pos,
+            mode="decode", cache=cache, cache_index=idx,
+        )
+        return next_tokens(self.cfg, ctx, params["decoder"], h), cache
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        B, S = shape.global_batch, shape.seq_len
+        frames = jax.ShapeDtypeStruct(
+            (B, self.cfg.encoder.n_ctx, self.cfg.d_model), self.cfg.compute_dtype
+        )
+        if shape.kind == "train":
+            return {"frames": frames, "tokens": _tok((B, S)), "labels": _tok((B, S))}
+        if shape.kind == "prefill":
+            return {"frames": frames, "tokens": _tok((B, S))}
+        if shape.kind == "decode":
+            return {"token": _tok((B, 1)), "cache_index": _tok(())}
+        raise ValueError(shape.kind)
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.encoder is not None:
+        return EncDecLM(cfg)
+    if cfg.inputs == "embeds":
+        return EmbedsLM(cfg)
+    return DecoderLM(cfg)

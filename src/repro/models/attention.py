@@ -1,0 +1,343 @@
+"""GQA attention: train / prefill / decode, KV cache (bf16 or int8).
+
+Memory discipline: training/prefill attention is *query-chunked* (lax.scan
+over query blocks) so the live score tensor is (B, KV, G, Cq, T) instead of
+(B, H, S, S) — this is what makes 32k prefill lower/compile within per-device
+HBM. The Pallas flash-attention kernel (kernels/flash_attention) is the TPU
+execution path; the jnp path here is the oracle and the CPU dry-run path.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import EMBED, NULL, TP, ModelConfig, ParamDef
+from repro.models.quant import qeinsum
+from repro.models.rotary import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg: ModelConfig, n_heads: int = 0, cross: bool = False) -> dict:
+    H = n_heads or cfg.n_heads
+    KV = H if cross else min(cfg.n_kv_heads, H)
+    hd = cfg.hd
+    d = cfg.d_model
+    defs = {
+        "wq": ParamDef((d, H * hd), (NULL, TP)),
+        "wk": ParamDef((d, KV * hd), (NULL, TP)),
+        "wv": ParamDef((d, KV * hd), (NULL, TP)),
+        "wo": ParamDef((H * hd, d), (TP, NULL)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H * hd,), (TP,), "zeros")
+        defs["bk"] = ParamDef((KV * hd,), (TP,), "zeros")
+        defs["bv"] = ParamDef((KV * hd,), (TP,), "zeros")
+    return defs
+
+
+def kv_cache_defs(
+    cfg: ModelConfig, batch: int, cap: int, n_heads: int = 0
+) -> dict:
+    """ShapeDtypeStructs for one attention layer's KV cache."""
+    H = n_heads or cfg.n_heads
+    KV = min(cfg.n_kv_heads, H)
+    hd = cfg.hd
+    if cfg.kv_quant:
+        return {
+            "k": jax.ShapeDtypeStruct((batch, cap, KV, hd), jnp.int8),
+            "v": jax.ShapeDtypeStruct((batch, cap, KV, hd), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, cap, KV, 1), jnp.bfloat16),
+            "v_scale": jax.ShapeDtypeStruct((batch, cap, KV, 1), jnp.bfloat16),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cap, KV, hd), cfg.compute_dtype),
+        "v": jax.ShapeDtypeStruct((batch, cap, KV, hd), cfg.compute_dtype),
+    }
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cap: int, n_heads: int = 0) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), kv_cache_defs(cfg, batch, cap, n_heads))
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array):
+    """Per (token, head) absmax int8. x: (B, T, KV, hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def _dus(buf: jax.Array, upd: jax.Array, index) -> jax.Array:
+    """Write upd (B,S,...) into buf (B,T,...) at seq position index. index may
+    be a scalar or per-batch (B,) — the latter vmaps (continuous batching:
+    every slot has its own length)."""
+    idx = jnp.asarray(index)
+    if idx.ndim == 1:
+        return jax.vmap(
+            lambda b, u, i: jax.lax.dynamic_update_slice_in_dim(b, u, i, axis=0)
+        )(buf, upd, idx)
+    return jax.lax.dynamic_update_slice_in_dim(buf, upd, index, axis=1)
+
+
+def cache_kv(cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array, index) -> dict:
+    """Write k/v (B, S_new, KV, hd) into cache at position ``index``."""
+    out = dict(cache)
+    if cfg.kv_quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        out["k"] = _dus(cache["k"], kq, index)
+        out["v"] = _dus(cache["v"], vq, index)
+        out["k_scale"] = _dus(cache["k_scale"], ks, index)
+        out["v_scale"] = _dus(cache["v_scale"], vs, index)
+    else:
+        out["k"] = _dus(cache["k"], k.astype(cache["k"].dtype), index)
+        out["v"] = _dus(cache["v"], v.astype(cache["v"].dtype), index)
+    return out
+
+
+def read_kv(cfg: ModelConfig, cache: Mapping, dtype):
+    if cfg.kv_quant:
+        return (
+            dequantize_kv(cache["k"], cache["k_scale"], dtype),
+            dequantize_kv(cache["v"], cache["v_scale"], dtype),
+        )
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (grouped-query, fp32 softmax)
+# ---------------------------------------------------------------------------
+
+
+def _group(q: jax.Array, kv_heads: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, kv_heads, H // kv_heads, hd)
+
+
+def _attend_block(q, k, v, mask, softcap: float = 0.0, scores_bf16: bool = False):
+    """q: (B,Cq,KV,G,hd); k/v: (B,T,KV,hd); mask: (B,1,1,Cq,T) bool.
+    scores_bf16 halves the materialized score traffic (row stats stay f32)."""
+    hd = q.shape[-1]
+    sdt = jnp.bfloat16 if scores_bf16 else jnp.float32
+    scale = jnp.asarray(1.0 / (hd ** 0.5), sdt)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q, k, preferred_element_type=sdt)
+    s = s * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, jnp.asarray(NEG_INF, sdt))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp((s - m).astype(jnp.float32))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(q.dtype), v)
+    return o
+
+
+def chunked_attention(
+    cfg: ModelConfig,
+    q: jax.Array,           # (B, S, H, hd)
+    k: jax.Array,           # (B, T, KV, hd)
+    v: jax.Array,
+    pos_q: jax.Array,       # (B, S) int32
+    pos_k: jax.Array,       # (B, T) int32
+    causal: bool = True,
+) -> jax.Array:
+    """Query-chunked attention; returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if cfg.use_pallas and causal and S > 1:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, pos_q, pos_k)
+    qg = _group(q, KV)
+    chunk = min(cfg.attn_chunk, S)
+    if S % chunk != 0:
+        chunk = S  # irregular small shapes: single block
+    nc = S // chunk
+    if nc == 1:
+        mask = (pos_q[:, None, None, :, None] >= pos_k[:, None, None, None, :]) if causal else jnp.ones((B, 1, 1, S, k.shape[1]), bool)
+        o = _attend_block(qg, k, v, mask, cfg.logit_softcap, cfg.attn_scores_bf16)
+        return o.reshape(B, S, H, hd)
+
+    qc = qg.reshape(B, nc, chunk, KV, H // KV, hd).transpose(1, 0, 2, 3, 4, 5)
+    pc = pos_q.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # flash-attention-style: recompute scores/probs in bwd —
+    # without this the scan stacks per-chunk probs (O(S^2) live residuals)
+    def body(_, qp):
+        qb, pb = qp
+        if causal:
+            mask = pb[:, None, None, :, None] >= pos_k[:, None, None, None, :]
+        else:
+            mask = jnp.ones((B, 1, 1, chunk, k.shape[1]), bool)
+        return None, _attend_block(qb, k, v, mask, cfg.logit_softcap, cfg.attn_scores_bf16)
+
+    _, o = jax.lax.scan(body, None, (qc, pc))
+    o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+    return o
+
+
+def decode_attention_quant(cfg: ModelConfig, q: jax.Array, cache: Mapping, cache_len) -> jax.Array:
+    """int8-KV decode without materializing a dequantized cache: the per
+    (token, head) scales fold into the score matrix (k) and the probability
+    matrix (v), so the int8 tensors feed the dots directly (mixed-dtype dot;
+    converts fuse into the MXU pass on TPU)."""
+    B, S, H, hd = q.shape
+    KV = cache["k"].shape[2]
+    qg = _group(q, KV)                                       # (B,S,KV,G,hd)
+    T = cache["k"].shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, cache["k"], preferred_element_type=jnp.float32)
+    k_sc = cache["k_scale"].astype(jnp.float32)[..., 0]      # (B,T,KV)
+    s = s * scale * k_sc.transpose(0, 2, 1)[:, :, None, None, :]
+    cl = jnp.asarray(cache_len)
+    cl = cl.reshape(-1, 1, 1, 1, 1) if cl.ndim == 1 else cl
+    mask = (jnp.arange(T)[None, None, None, None, :] < cl) & jnp.ones((B, 1, 1, S, 1), bool)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    v_sc = cache["v_scale"].astype(jnp.float32)[..., 0]
+    p = p * v_sc.transpose(0, 2, 1)[:, :, None, None, :]
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(jnp.bfloat16), cache["v"], preferred_element_type=jnp.float32)
+    return o.astype(q.dtype).reshape(B, S, H, hd)
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    q: jax.Array,           # (B, 1, H, hd)
+    k: jax.Array,           # (B, T, KV, hd)  (cache contents, incl. new token)
+    v: jax.Array,
+    cache_len,              # scalar: valid prefix length
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if cfg.use_pallas:
+        from repro.kernels.decode_attention import ops as da_ops
+
+        return da_ops.decode_attention(q, k, v, cache_len)
+    qg = _group(q, KV)
+    T = k.shape[1]
+    cl = jnp.asarray(cache_len)
+    cl = cl.reshape(-1, 1, 1, 1, 1) if cl.ndim == 1 else cl  # per-slot lengths
+    mask = (jnp.arange(T)[None, None, None, None, :] < cl) & jnp.ones((B, 1, 1, S, 1), bool)
+    o = _attend_block(qg, k, v, mask, cfg.logit_softcap, cfg.attn_scores_bf16)
+    return o.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Full attention sub-layer (projection + rope + attend + out-projection)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: ModelConfig, p: Mapping, x: jax.Array, n_heads: int):
+    B, S, _ = x.shape
+    H = n_heads
+    KV = min(cfg.n_kv_heads, H)
+    hd = cfg.hd
+    q = qeinsum("bsd,dh->bsh", x, p["wq"])
+    k = qeinsum("bsd,dh->bsh", x, p["wk"])
+    v = qeinsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KV, hd),
+        v.reshape(B, S, KV, hd),
+    )
+
+
+def _apply_pos(cfg: ModelConfig, x: jax.Array, positions) -> jax.Array:
+    if cfg.pos == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.pos == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return x
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: Mapping,
+    x: jax.Array,
+    positions: jax.Array,
+    mode: str,                      # train | prefill | decode
+    cache: Optional[Mapping] = None,
+    cache_index=None,               # scalar write offset for decode/prefill
+    causal: bool = True,
+    n_heads: int = 0,
+):
+    """Returns (out, new_cache)."""
+    H = n_heads or cfg.n_heads
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, H)
+    pos_t = positions[0] if cfg.pos == "mrope" else positions  # temporal stream for masks
+    q = _apply_pos(cfg, q, positions)
+    k = _apply_pos(cfg, k, positions)
+
+    new_cache = cache
+    if mode == "train":
+        o = chunked_attention(cfg, q, k, v, pos_t, pos_t, causal=causal)
+    elif mode == "prefill":
+        assert cache is not None
+        new_cache = cache_kv(cfg, cache, k, v, 0 if cache_index is None else cache_index)
+        o = chunked_attention(cfg, q, k, v, pos_t, pos_t, causal=causal)
+    elif mode == "decode":
+        assert cache is not None and cache_index is not None
+        new_cache = cache_kv(cfg, cache, k, v, cache_index)
+        if cfg.kv_quant:
+            o = decode_attention_quant(cfg, q, new_cache, cache_len=cache_index + S)
+        else:
+            ck, cv = read_kv(cfg, new_cache, x.dtype)
+            o = decode_attention(cfg, q, ck, cv, cache_len=cache_index + S)
+    else:
+        raise ValueError(mode)
+
+    out = qeinsum("bsh,he->bse", o.reshape(B, S, H * cfg.hd), p["wo"])
+    return out, new_cache
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: Mapping,
+    x: jax.Array,
+    kv_cache: Mapping,       # precomputed {"k": (B,T,H,hd), "v": ...} from encoder
+):
+    """Enc-dec cross attention; KV computed once from encoder output."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    hd = cfg.hd
+    q = qeinsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    k = kv_cache["k"].astype(x.dtype)
+    v = kv_cache["v"].astype(x.dtype)
+    T = k.shape[1]
+    pos_q = jnp.zeros((B, S), jnp.int32)
+    pos_k = jnp.zeros((B, T), jnp.int32)
+    o = chunked_attention(cfg, q, k, v, pos_q, pos_k, causal=False)
+    return qeinsum("bsh,he->bse", o.reshape(B, S, H * hd), p["wo"])
+
+
+def cross_kv(cfg: ModelConfig, p: Mapping, enc_out: jax.Array):
+    """Project encoder output to cross-attention K/V once (prefill)."""
+    B, T, _ = enc_out.shape
+    H = cfg.n_heads
+    hd = cfg.hd
+    k = qeinsum("btd,dh->bth", enc_out, p["wk"]).reshape(B, T, H, hd)
+    v = qeinsum("btd,dh->bth", enc_out, p["wv"]).reshape(B, T, H, hd)
+    return {"k": k, "v": v}

@@ -1,0 +1,28 @@
+"""Dense FFN: gated (SwiGLU) or plain (GELU) MLP, tensor-parallel over TP."""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax.numpy as jnp
+
+from repro.models.common import NULL, TP, ModelConfig, ParamDef, activation
+from repro.models.quant import qeinsum
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    defs = {
+        "w1": ParamDef((d, f), (NULL, TP)),
+        "w2": ParamDef((f, d), (TP, NULL)),
+    }
+    if cfg.gated_mlp:
+        defs["w3"] = ParamDef((d, f), (NULL, TP))
+    return defs
+
+
+def mlp(cfg: ModelConfig, p: Mapping, x: jnp.ndarray) -> jnp.ndarray:
+    h = qeinsum("bsd,df->bsf", x, p["w1"])
+    h = activation(cfg, h)
+    if cfg.gated_mlp:
+        h = h * qeinsum("bsd,df->bsf", x, p["w3"])
+    return qeinsum("bsf,fd->bsd", h, p["w2"])

@@ -1,0 +1,231 @@
+"""Mixture-of-Experts FFN with expert parallelism over the TP ('model') axis.
+
+Design (see DESIGN.md §5):
+  * Activations are replicated over 'model' after the attention psum, so each
+    model shard holds *all* local tokens and a slice of the experts. Dispatch
+    is therefore local: each shard gathers (capacity-bounded) the tokens
+    routed to its experts, runs the expert FFNs, scatter-adds the gated
+    outputs, and a single psum over 'model' combines — the same collective
+    cost as a TP FFN, no all-to-all.
+  * Capacity per expert: C = ceil(cf * k * T_local / E). Overflow tokens are
+    dropped (standard Switch/GShard semantics); property tests check exact
+    equivalence with the dense reference when capacity is ample.
+  * llama4-scale expert weights (773 B params) additionally shard d_ff over
+    'data' (FSDP) and all-gather at use.
+
+The single-device path (ctx is None) runs the identical capacity algorithm
+with all experts local — it is the oracle for the sharded path.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import FSDP, NULL, TP, ModelConfig, ParamDef, activation
+from repro.models.quant import qeinsum
+
+try:  # JAX >= 0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.n_experts
+    ff_axis = FSDP if m.fsdp_experts else NULL
+    defs = {
+        "router": ParamDef((d, E), (NULL, NULL)),
+        "w1": ParamDef((E, d, f), (TP, NULL, ff_axis)),
+        "w2": ParamDef((E, f, d), (TP, ff_axis, NULL)),
+    }
+    if cfg.gated_mlp:
+        defs["w3"] = ParamDef((E, d, f), (TP, NULL, ff_axis))
+    return defs
+
+
+def capacity_for(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * m.top_k * n_tokens / m.n_experts) + 1
+    c = min(max(c, 4), n_tokens)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Core per-shard algorithm (also the single-device path)
+# ---------------------------------------------------------------------------
+
+
+def _experts_ffn(cfg: ModelConfig, xg, w1, w3, w2):
+    """xg: (E_local, C, d); expert weights (E_local, d, f) / (E_local, f, d)."""
+    h = qeinsum("ecd,edf->ecf", xg, w1)
+    h = activation(cfg, h)
+    if cfg.gated_mlp:
+        h = h * qeinsum("ecd,edf->ecf", xg, w3)
+    return qeinsum("ecf,efd->ecd", h, w2)
+
+
+def moe_core(
+    cfg: ModelConfig,
+    x_flat: jax.Array,         # (T, d)
+    logits: jax.Array,         # (T, E_global) fp32
+    w1: jax.Array,             # (E_local, d, f)
+    w3: Optional[jax.Array],
+    w2: jax.Array,             # (E_local, f, d)
+    e_offset,                  # first global expert id held by this shard
+    capacity: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (T, d), aux_loss scalar)."""
+    m = cfg.moe
+    T = x_flat.shape[0]
+    E_local = (w1["q"] if isinstance(w1, Mapping) else w1).shape[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (T, E)
+    topv, topi = jax.lax.top_k(probs, m.top_k)                    # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    eids = e_offset + jnp.arange(E_local)                          # (E_local,)
+    match = topi[None, :, :] == eids[:, None, None]                # (E_local, T, k)
+    w_te = jnp.sum(match * topv[None], axis=-1)                    # (E_local, T)
+    assigned = jnp.any(match, axis=-1)                             # (E_local, T)
+
+    # top-C tokens per expert, ranked by gate weight among assigned tokens
+    score = assigned.astype(jnp.float32) + w_te
+    _, sel_idx = jax.lax.top_k(score, capacity)                    # (E_local, C)
+    sel_valid = jnp.take_along_axis(assigned, sel_idx, axis=-1)    # (E_local, C)
+    gate = jnp.take_along_axis(w_te, sel_idx, axis=-1) * sel_valid
+
+    xg = jnp.take(x_flat, sel_idx.reshape(-1), axis=0).reshape(E_local, capacity, -1)
+    y = _experts_ffn(cfg, xg, w1, w3, w2)
+    y = y * gate[..., None].astype(y.dtype)
+    out = jnp.zeros_like(x_flat).at[sel_idx.reshape(-1)].add(y.reshape(-1, x_flat.shape[-1]))
+
+    # Switch-style load-balance aux loss over *global* experts (identical on
+    # every model shard because logits/topi are computed from replicated x).
+    E = probs.shape[-1]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi, E, dtype=jnp.float32).sum(1), axis=0
+    ) / m.top_k                                                    # (E,)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Public layer
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(cfg: ModelConfig, ctx, p: Mapping, x: jax.Array):
+    """x: (B, S, d) — replicated over TP, batch-sharded. Returns (out, aux)."""
+    B, S, d = x.shape
+    w3 = p.get("w3")
+    if ctx is None or ctx.tp_size == 1:
+        x_flat = x.reshape(B * S, d)
+        logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), p["router"].astype(jnp.float32))
+        cap = capacity_for(cfg, B * S)
+        out, aux = moe_core(cfg, x_flat, logits, p["w1"], w3, p["w2"], 0, cap)
+        return out.reshape(B, S, d), aux
+
+    mesh = ctx.mesh
+    m = cfg.moe
+    assert m.n_experts % ctx.tp_size == 0, (cfg.name, m.n_experts, ctx.tp_size)
+    batch_spec = ctx.batch_spec_for(B)
+    x_spec = jax.sharding.PartitionSpec(batch_spec, None, None)
+    ff_ax = ctx.fsdp_axis if m.fsdp_experts else None
+    P = jax.sharding.PartitionSpec
+
+    def wspec(spec3):
+        """Spec for a (possibly int8-quantized) expert-weight leaf."""
+        def leaf_spec(v):
+            if hasattr(v, "ndim") and v.shape[-2:] == (1,) + v.shape[-1:]:
+                # scale tensor: contracting dim is 1 — drop its sharding
+                s = list(spec3)
+                s[-2] = None
+                return P(*s)
+            return P(*spec3)
+        return leaf_spec
+
+    def spec_tree_for(w, spec3):
+        if isinstance(w, Mapping) and "q" in w:
+            return {"q": P(*spec3), "s": wspec(spec3)(w["s"])}
+        return P(*spec3)
+
+    w1_s3 = (ctx.tp_axis, None, ff_ax)
+    w2_s3 = (ctx.tp_axis, ff_ax, None)
+    r_spec = P(None, None)
+    dp = ctx.size_of(batch_spec)
+    T_local = (B // dp) * S
+    token_gather = cfg.moe_token_gather and m.fsdp_experts and batch_spec is not None
+    cap = capacity_for(cfg, T_local * dp if token_gather else T_local)
+
+    def _gather_w(w, axis):
+        if isinstance(w, Mapping) and "q" in w:
+            return {
+                "q": jax.lax.all_gather(w["q"], ctx.fsdp_axis, axis=axis, tiled=True),
+                "s": jax.lax.all_gather(w["s"], ctx.fsdp_axis, axis=axis, tiled=True)
+                if w["s"].shape[axis] > 1
+                else w["s"],
+            }
+        return jax.lax.all_gather(w, ctx.fsdp_axis, axis=axis, tiled=True)
+
+    def shard_fn(x_l, rw, w1, w3_, w2):
+        Bl, Sl, dl = x_l.shape
+        if m.fsdp_experts:
+            w1 = _gather_w(w1, 2)
+            w2 = _gather_w(w2, 1)
+            if w3_ is not None:
+                w3_ = _gather_w(w3_, 2)
+        x_flat = x_l.reshape(Bl * Sl, dl)
+        logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), rw.astype(jnp.float32))
+        e_off = jax.lax.axis_index(ctx.tp_axis) * (m.n_experts // ctx.tp_size)
+        out, aux = moe_core(cfg, x_flat, logits, w1, w3_, w2, e_off, cap)
+        out = jax.lax.psum(out, ctx.tp_axis)
+        aux = jax.lax.pmean(aux, ctx.batch_axes) if ctx.batch_axes else aux
+        return out.reshape(Bl, Sl, dl), aux
+
+    def shard_fn_tokens(x_l, rw, w1, w3_, w2):
+        """Decode-mode layout: tokens are tiny — all-gather THEM over the
+        fsdp axis and keep expert weights sharded (experts x 'model',
+        d_ff x 'data'). Per-layer wire drops from gigabytes (weight
+        gathers) to a few MB (token gather + partial-output psum)."""
+        Bl, Sl, dl = x_l.shape
+        xg = x_l
+        for ax in reversed(ctx.batch_axes):
+            xg = jax.lax.all_gather(xg, ax, axis=0, tiled=True)
+        T = xg.shape[0] * Sl
+        x_flat = xg.reshape(T, dl)
+        logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), rw.astype(jnp.float32))
+        e_off = jax.lax.axis_index(ctx.tp_axis) * (m.n_experts // ctx.tp_size)
+        out, aux = moe_core(cfg, x_flat, logits, w1, w3_, w2, e_off, cap)
+        # partial over d_ff ('data') and experts ('model') — one combined psum
+        out = jax.lax.psum(out, (ctx.fsdp_axis, ctx.tp_axis))
+        # slice this shard's tokens back out
+        idx = jnp.zeros((), jnp.int32)
+        for a in ctx.batch_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        out_l = jax.lax.dynamic_slice_in_dim(out.reshape(-1, Bl * Sl, dl), idx, 1, axis=0)[0]
+        return out_l.reshape(Bl, Sl, dl), aux
+
+    fn_body = shard_fn_tokens if token_gather else shard_fn
+    w1_arg = p["w1"]
+    w3_arg = w3 if w3 is not None else p["w1"]
+    w2_arg = p["w2"]
+    in_specs = (
+        x_spec,
+        r_spec,
+        spec_tree_for(w1_arg, w1_s3),
+        spec_tree_for(w3_arg, w1_s3),
+        spec_tree_for(w2_arg, w2_s3),
+    )
+    out_specs = (x_spec, jax.sharding.PartitionSpec())
+    fn = _shard_map(
+        fn_body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    out, aux = fn(x, p["router"], w1_arg, w3_arg, w2_arg)
+    return out, aux

@@ -1,0 +1,120 @@
+"""Weight-only int8 quantization for serving (per-output-channel scales).
+
+A quantized weight is a dict {"q": int8 W, "s": scales} where the scale
+tensor is W's shape with the contracting axis (ndim-2 for every dense weight
+in this codebase: x @ W layouts) reduced to 1. ``qeinsum`` computes the dot
+on the int8 tensor directly (mixed-dtype dot — the dequant fuses into the
+MXU read on TPU) and applies scales on the output, so HBM traffic for
+weights halves vs bf16. Accuracy: per-channel absmax keeps relative error
+~0.4% — greedy decode parity is tested.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Union
+
+import jax
+import jax.numpy as jnp
+
+QuantW = Mapping  # {"q": int8, "s": float}
+
+# leaf names eligible for weight-only quantization (attention / MLP / MoE /
+# unembed — embedding gathers and 1D params stay fp)
+QUANT_LEAVES = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "unembed"}
+
+
+def quantize_weight(w: jax.Array) -> dict:
+    axis = w.ndim - 2
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.bfloat16)}
+
+
+def is_quant(w: Any) -> bool:
+    return isinstance(w, Mapping) and "q" in w and "s" in w
+
+
+def qeinsum(pattern: str, x: jax.Array, w: Union[jax.Array, QuantW]) -> jax.Array:
+    """einsum where w may be a quantized dict; output dtype follows x."""
+    if not is_quant(w):
+        return jnp.einsum(pattern, x, w.astype(x.dtype))
+    y = jnp.einsum(pattern, x, w["q"], preferred_element_type=jnp.float32)
+    # scale shape = w.shape with the contracting axis (ndim-2) at 1; output
+    # trailing dims line up with w's non-contracted dims in every pattern
+    # used in this codebase ("...d,df->...f", "ecd,edf->ecf", ...).
+    s = w["s"].astype(jnp.float32)
+    s = jnp.squeeze(s, axis=s.ndim - 2) if s.ndim == 2 else s
+    return (y * s).astype(x.dtype)
+
+
+def quantize_params(params: Any) -> Any:
+    """Replace eligible 2D/3D weight leaves with quantized dicts (by key)."""
+
+    def walk(node):
+        if isinstance(node, Mapping):
+            out = {}
+            for k, v in node.items():
+                if (
+                    k in QUANT_LEAVES
+                    and hasattr(v, "ndim")
+                    and v.ndim >= 2
+                    and v.dtype in (jnp.bfloat16, jnp.float32, jnp.float16)
+                ):
+                    out[k] = quantize_weight(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+
+    return walk(params)
+
+
+def quantized_shape_tree(shapes: Any) -> Any:
+    """ShapeDtypeStruct tree matching quantize_params (dry-run lowering)."""
+
+    def walk(node):
+        if isinstance(node, Mapping):
+            out = {}
+            for k, v in node.items():
+                if k in QUANT_LEAVES and hasattr(v, "shape") and len(v.shape) >= 2:
+                    sshape = list(v.shape)
+                    sshape[-2] = 1
+                    out[k] = {
+                        "q": jax.ShapeDtypeStruct(v.shape, jnp.int8),
+                        "s": jax.ShapeDtypeStruct(tuple(sshape), jnp.bfloat16),
+                    }
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+
+    return walk(shapes)
+
+
+def quantized_sharding_tree(shardings: Any, shapes: Any) -> Any:
+    """Sharding tree matching quantize_params: q keeps the weight's spec; the
+    scale drops the (now size-1) contracting-axis sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def walk(sh_node, shp_node):
+        if isinstance(shp_node, Mapping):
+            out = {}
+            for k, v in shp_node.items():
+                sh = sh_node[k] if isinstance(sh_node, Mapping) else sh_node
+                if k in QUANT_LEAVES and hasattr(v, "shape") and len(v.shape) >= 2:
+                    if sh is None:
+                        out[k] = {"q": None, "s": None}
+                    else:
+                        spec = list(sh.spec) + [None] * (len(v.shape) - len(sh.spec))
+                        s_spec = list(spec)
+                        s_spec[-2] = None
+                        out[k] = {
+                            "q": sh,
+                            "s": NamedSharding(sh.mesh, P(*s_spec)),
+                        }
+                else:
+                    out[k] = walk(sh, v)
+            return out
+        return sh_node
+
+    return walk(shardings, shapes)

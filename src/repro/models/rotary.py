@@ -1,0 +1,61 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # x: (..., head_dim); cos/sin broadcastable to (..., head_dim//2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    inv = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: tuple
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, hd); positions: (3, B, S) int32 — temporal/height/width
+    streams. ``sections`` partitions the hd/2 frequency slots among the three
+    streams (e.g. (16, 24, 24) for hd=128).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (3, B, S, hd/2)
+    # Select which stream drives each frequency slot.
+    sel = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=hd // 2)
+    ang = jnp.take_along_axis(ang, sel[None, None, None, :].astype(jnp.int32), axis=0)[0]
+    # -> (B, S, hd/2) after picking stream per slot
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x, cos, sin)
+
+
+def positions_for(
+    batch: int, seq: int, offset=0, dtype=jnp.int32
+) -> jax.Array:
+    return jnp.arange(seq, dtype=dtype)[None, :] + jnp.asarray(offset, dtype)
+
+
+def mrope_positions_for(batch: int, seq: int, offset=0) -> jax.Array:
+    """Text-only default: all three streams share the temporal index."""
+    p = positions_for(batch, seq, offset)
+    p = jnp.broadcast_to(p, (batch, seq))
+    return jnp.broadcast_to(p[None], (3, batch, seq))

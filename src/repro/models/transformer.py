@@ -1,0 +1,268 @@
+"""Decoder stack: superblock pattern -> scan over superblocks.
+
+A *superblock* is one repetition of ``cfg.block_pattern`` (e.g. 1 layer for
+dense archs; 1 attn + 7 mamba for Jamba; 7 mLSTM + 1 sLSTM for xLSTM). All
+superblocks are structurally identical, so their parameters are stacked on a
+leading axis and the stack is a single ``lax.scan`` — keeping the HLO (and
+compile time at 512 devices) independent of depth. Remat wraps the scan body.
+
+Cache: a pytree whose leaves carry a leading (n_superblocks,) axis; the scan
+consumes/produces it as xs/ys.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import xlstm as xl
+from repro.models.common import (
+    ModelConfig,
+    ParamDef,
+    apply_norm,
+    embed_defs,
+    embed_tokens,
+    init_tree,
+    norm_defs,
+    shape_tree,
+    stack_defs,
+)
+from repro.models.mlp import mlp, mlp_defs
+from repro.models.moe import moe_defs, moe_ffn
+
+MIXER_KINDS = ("attn", "mamba", "mlstm", "slstm")
+
+
+# ---------------------------------------------------------------------------
+# Param / cache definitions
+# ---------------------------------------------------------------------------
+
+
+def superblock_defs(cfg: ModelConfig) -> dict:
+    defs: dict = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        defs[f"l{i}_norm"] = norm_defs(cfg)
+        if kind == "attn":
+            defs[f"l{i}_mixer"] = attn.attention_defs(cfg)
+        elif kind == "mamba":
+            defs[f"l{i}_mixer"] = mam.mamba_defs(cfg)
+        elif kind == "mlstm":
+            defs[f"l{i}_mixer"] = xl.mlstm_defs(cfg)
+        elif kind == "slstm":
+            defs[f"l{i}_mixer"] = xl.slstm_defs(cfg)
+        else:
+            raise ValueError(kind)
+        if cfg.cross_attn:
+            defs[f"l{i}_cross_norm"] = norm_defs(cfg)
+            defs[f"l{i}_cross"] = attn.attention_defs(cfg, cross=True)
+        if cfg.d_ff > 0:
+            defs[f"l{i}_ffn_norm"] = norm_defs(cfg)
+            if cfg.layer_has_moe(i):
+                defs[f"l{i}_ffn"] = moe_defs(cfg)
+            else:
+                defs[f"l{i}_ffn"] = mlp_defs(cfg)
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    defs = dict(embed_defs(cfg))
+    defs["blocks"] = stack_defs(superblock_defs(cfg), cfg.n_superblocks)
+    defs["final_norm"] = norm_defs(cfg)
+    return defs
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> Any:
+    return init_tree(rng, param_defs(cfg), cfg.param_dtype)
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    return shape_tree(param_defs(cfg), cfg.param_dtype)
+
+
+def _stack_shape(defs: Mapping, n: int) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), defs
+    )
+
+
+def cache_defs(cfg: ModelConfig, batch: int, cap: int, enc_len: int = 0) -> dict:
+    """ShapeDtypeStructs for the full decode cache (leading n_sb axis)."""
+    per_sb: dict = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "attn":
+            per_sb[f"l{i}_mixer"] = attn.kv_cache_defs(cfg, batch, cap)
+        elif kind == "mamba":
+            per_sb[f"l{i}_mixer"] = mam.mamba_cache_defs(cfg, batch)
+        elif kind == "mlstm":
+            per_sb[f"l{i}_mixer"] = xl.mlstm_cache_defs(cfg, batch)
+        elif kind == "slstm":
+            per_sb[f"l{i}_mixer"] = xl.slstm_cache_defs(cfg, batch)
+        if cfg.cross_attn:
+            assert enc_len > 0
+            per_sb[f"l{i}_cross"] = {
+                "k": jax.ShapeDtypeStruct((batch, enc_len, cfg.n_heads, cfg.hd), cfg.compute_dtype),
+                "v": jax.ShapeDtypeStruct((batch, enc_len, cfg.n_heads, cfg.hd), cfg.compute_dtype),
+            }
+    return {"blocks": _stack_shape(per_sb, cfg.n_superblocks)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cap: int, enc_len: int = 0) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_defs(cfg, batch, cap, enc_len))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _constrain(ctx, x: jax.Array, seq_shard: bool = False) -> jax.Array:
+    if ctx is None:
+        return x
+    seq_ax = None
+    if seq_shard and x.shape[1] % ctx.tp_size == 0:
+        # Megatron-style sequence parallelism: activations between blocks live
+        # seq-sharded over TP, so XLA emits reduce-scatter + all-gather pairs
+        # instead of all-reduces — half the TP wire bytes.
+        seq_ax = ctx.tp_axis
+    sh = jax.sharding.NamedSharding(ctx.mesh, P(ctx.batch_spec_for(x.shape[0]), seq_ax, None))
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def _superblock(
+    cfg: ModelConfig,
+    ctx,
+    p: Mapping,
+    x: jax.Array,
+    positions,
+    mode: str,
+    cache_sb: Optional[Mapping],
+    cache_index,
+    enc_out,
+    causal: bool,
+):
+    new_cache: dict = {}
+    aux = jnp.zeros((), jnp.float32)
+    x = _constrain(ctx, x, cfg.seq_shard_activations)
+    # Block loop-invariant code motion out of the layer scan: without the
+    # barrier XLA hoists (a) FSDP weight all-gathers (materializing every
+    # layer's gathered experts at once — 100s of GB for llama4/jamba),
+    # (b) bf16->f32 weight upcasts (CPU backend), (c) int8->bf16 KV-cache
+    # dequants — all per-layer transients that must stay inside the loop.
+    p = jax.lax.optimization_barrier(p)
+    if cache_sb is not None:
+        cache_sb = jax.lax.optimization_barrier(cache_sb)
+    for i, kind in enumerate(cfg.block_pattern):
+        h = apply_norm(cfg, p[f"l{i}_norm"], x)
+        c_in = cache_sb.get(f"l{i}_mixer") if cache_sb is not None else None
+        if kind == "attn":
+            h, c_out = attn.self_attention(
+                cfg, p[f"l{i}_mixer"], h, positions, mode, c_in, cache_index, causal=causal
+            )
+        elif kind == "mamba":
+            h, c_out = mam.mamba_mixer(cfg, p[f"l{i}_mixer"], h, mode, c_in)
+        elif kind == "mlstm":
+            h, c_out = xl.mlstm_mixer(cfg, p[f"l{i}_mixer"], h, mode, c_in)
+        elif kind == "slstm":
+            h, c_out = xl.slstm_mixer(cfg, p[f"l{i}_mixer"], h, mode, c_in)
+        x = x + h
+        if cache_sb is not None:
+            new_cache[f"l{i}_mixer"] = c_out
+        if cfg.cross_attn:
+            h = apply_norm(cfg, p[f"l{i}_cross_norm"], x)
+            if mode == "train":
+                kv = attn.cross_kv(cfg, p[f"l{i}_cross"], enc_out)
+            elif mode == "prefill":
+                kv = attn.cross_kv(cfg, p[f"l{i}_cross"], enc_out)
+                new_cache[f"l{i}_cross"] = jax.tree.map(lambda a: a.astype(cfg.compute_dtype), kv)
+            else:  # decode
+                kv = cache_sb[f"l{i}_cross"]
+                new_cache[f"l{i}_cross"] = kv
+            x = x + attn.cross_attention(cfg, p[f"l{i}_cross"], h, kv)
+        if cfg.d_ff > 0:
+            h = apply_norm(cfg, p[f"l{i}_ffn_norm"], x)
+            if cfg.layer_has_moe(i):
+                h, a = moe_ffn(cfg, ctx, p[f"l{i}_ffn"], h)
+                aux = aux + a
+            else:
+                h = mlp(cfg, p[f"l{i}_ffn"], h)
+            x = x + h
+        x = _constrain(ctx, x, cfg.seq_shard_activations)
+    return x, (new_cache if cache_sb is not None else None), aux
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def run_stack(
+    cfg: ModelConfig,
+    ctx,
+    blocks_params,
+    x: jax.Array,
+    positions,
+    mode: str,
+    cache: Optional[Mapping] = None,
+    cache_index=None,
+    enc_out=None,
+    causal: bool = True,
+):
+    """Scan the superblock stack. Returns (x, new_cache, aux)."""
+    remat = mode == "train" and cfg.remat != "none"
+
+    if cache is None:
+        def body(carry, p_sb):
+            xx, aux = carry
+            xx, _, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, None, cache_index, enc_out, causal)
+            return (xx, aux + a), None
+
+        body = _remat_wrap(cfg, body) if remat else body
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), blocks_params, unroll=cfg.scan_unroll
+        )
+        return x, None, aux
+
+    def body(carry, sb):
+        xx, aux = carry
+        p_sb, c_sb = sb
+        xx, c_new, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, c_sb, cache_index, enc_out, causal)
+        return (xx, aux + a), c_new
+
+    body = _remat_wrap(cfg, body) if remat else body
+    (x, aux), new_blocks = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (blocks_params, cache["blocks"]),
+        unroll=cfg.scan_unroll,
+    )
+    return x, {"blocks": new_blocks}, aux
+
+
+def forward(
+    cfg: ModelConfig,
+    ctx,
+    params: Mapping,
+    tokens: Optional[jax.Array] = None,
+    inputs_embeds: Optional[jax.Array] = None,
+    positions=None,
+    mode: str = "train",
+    cache: Optional[Mapping] = None,
+    cache_index=None,
+    enc_out=None,
+) -> Tuple[jax.Array, Optional[Mapping], jax.Array]:
+    """Returns (hidden (B,S,d) post-final-norm, new_cache, moe_aux)."""
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(cfg.compute_dtype)
+    else:
+        x = embed_tokens(cfg, params, tokens)
+    x = _constrain(ctx, x)
+    x, new_cache, aux = run_stack(
+        cfg, ctx, params["blocks"], x, positions, mode, cache, cache_index, enc_out
+    )
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, new_cache, aux

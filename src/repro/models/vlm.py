@@ -1,0 +1,42 @@
+"""Qwen2-VL backbone helpers.
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed inputs_embeds (patch embeddings already merged with token
+embeddings). This module supplies M-RoPE position-id construction for
+image-bearing sequences, used by examples and tests; the backbone itself is
+``transformer.forward`` with ``inputs='embeds'`` and ``pos='mrope'``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mrope_positions_with_image(
+    batch: int, seq: int, image_start: int, grid_h: int, grid_w: int
+) -> jnp.ndarray:
+    """(3, B, S) positions: text ranks advance temporally; the image span gets
+    a constant temporal index with spatial (h, w) coordinates — Qwen2-VL §2.1."""
+    n_img = grid_h * grid_w
+    assert image_start + n_img <= seq
+    t = np.zeros(seq, np.int32)
+    h = np.zeros(seq, np.int32)
+    w = np.zeros(seq, np.int32)
+    # leading text
+    t[:image_start] = np.arange(image_start)
+    h[:image_start] = np.arange(image_start)
+    w[:image_start] = np.arange(image_start)
+    # image block: constant t, spatial h/w
+    t[image_start : image_start + n_img] = image_start
+    hh, ww = np.meshgrid(np.arange(grid_h), np.arange(grid_w), indexing="ij")
+    h[image_start : image_start + n_img] = image_start + hh.reshape(-1)
+    w[image_start : image_start + n_img] = image_start + ww.reshape(-1)
+    # trailing text resumes after max position so far
+    nxt = image_start + max(grid_h, grid_w)
+    tail = seq - image_start - n_img
+    if tail > 0:
+        r = np.arange(tail)
+        for arr in (t, h, w):
+            arr[image_start + n_img :] = nxt + r
+    pos = np.stack([t, h, w])  # (3, S)
+    return jnp.asarray(np.broadcast_to(pos[:, None, :], (3, batch, seq)))

@@ -1,0 +1,80 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (log-mel + conv downsampling) is a STUB per the
+assignment: ``input_specs()`` supplies precomputed frame embeddings
+(B, n_ctx=1500, d). The encoder is a bidirectional transformer; the decoder
+is a causal stack with cross-attention (cross K/V cached at prefill).
+
+Adaptation note (DESIGN.md): the decoder uses RoPE instead of Whisper's
+learned 448-position table so that the assigned decode_32k shape is
+well-defined; everything else follows the published architecture
+(layernorm, GELU MLP, MHA).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig, apply_norm, norm_defs, stack_defs
+from repro.models.transformer import run_stack, superblock_defs
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    e = cfg.encoder
+    return cfg.replace(
+        n_layers=e.n_layers,
+        n_heads=e.n_heads,
+        n_kv_heads=e.n_heads,
+        d_ff=e.d_ff,
+        cross_attn=False,
+        pos="none",              # positions baked into the stub frame embeddings
+        block_pattern=("attn",),
+        moe=None,
+    )
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    ecfg = encoder_cfg(cfg)
+    return {
+        "decoder": tf.param_defs(cfg),
+        "encoder": {
+            "blocks": stack_defs(superblock_defs(ecfg), ecfg.n_superblocks),
+            "final_norm": norm_defs(ecfg),
+        },
+    }
+
+
+def encode(cfg: ModelConfig, ctx, params: Mapping, frames: jax.Array) -> jax.Array:
+    ecfg = encoder_cfg(cfg)
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x = frames.astype(ecfg.compute_dtype)
+    x, _, _ = run_stack(
+        ecfg, ctx, params["encoder"]["blocks"], x, pos,
+        "train", cache=None, causal=False,
+    )
+    return apply_norm(ecfg, params["encoder"]["final_norm"], x)
+
+
+def forward(
+    cfg: ModelConfig,
+    ctx,
+    params: Mapping,
+    frames: jax.Array = None,
+    tokens: jax.Array = None,
+    positions=None,
+    mode: str = "train",
+    cache=None,
+    cache_index=None,
+    enc_out=None,
+):
+    """Returns (decoder hidden, new_cache, aux). Encoder runs in train/prefill."""
+    if mode in ("train", "prefill"):
+        enc_out = encode(cfg, ctx, params, frames)
+    return tf.forward(
+        cfg, ctx, params["decoder"], tokens=tokens, positions=positions,
+        mode=mode, cache=cache, cache_index=cache_index, enc_out=enc_out,
+    )

@@ -1,0 +1,91 @@
+"""Xception-analog image classifier — the paper's own application model.
+
+StraightLine's evaluation serves an Xception image classifier (4 classes:
+cats / chook / dogs / horses, 299x299 inputs). We implement the same
+depthwise-separable-convolution architecture in JAX (configurable width /
+depth so examples and benchmarks run quickly on CPU) and use it as the
+default request workload in the serving examples — request "data size" is
+image resolution, exactly the paper's axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NULL, ParamDef, init_tree, shape_tree
+
+
+@dataclass(frozen=True)
+class XceptionConfig:
+    num_classes: int = 4
+    width: int = 32            # entry conv channels
+    n_blocks: int = 4          # middle separable blocks
+    img_size: int = 64         # reduced from 299 for CPU speed (same structure)
+    param_dtype: object = jnp.float32
+
+
+def _conv_def(k: int, cin: int, cout: int) -> ParamDef:
+    return ParamDef((k, k, cin, cout), (NULL,) * 4)
+
+
+def param_defs(cfg: XceptionConfig) -> dict:
+    w = cfg.width
+    defs = {
+        "entry": _conv_def(3, 3, w),
+        "entry_b": ParamDef((w,), (NULL,), "zeros"),
+    }
+    for i in range(cfg.n_blocks):
+        defs[f"b{i}_dw"] = ParamDef((3, 3, 1, w), (NULL,) * 4)       # depthwise
+        defs[f"b{i}_pw"] = _conv_def(1, w, w)                         # pointwise
+        defs[f"b{i}_bn_scale"] = ParamDef((w,), (NULL,), "ones")
+        defs[f"b{i}_bn_bias"] = ParamDef((w,), (NULL,), "zeros")
+    defs["head"] = ParamDef((w, cfg.num_classes), (NULL, NULL))
+    defs["head_b"] = ParamDef((cfg.num_classes,), (NULL,), "zeros")
+    return defs
+
+
+def init(rng: jax.Array, cfg: XceptionConfig):
+    return init_tree(rng, param_defs(cfg), cfg.param_dtype)
+
+
+def param_shapes(cfg: XceptionConfig):
+    return shape_tree(param_defs(cfg), cfg.param_dtype)
+
+
+def _sep_block(p: Mapping, i: int, x: jax.Array) -> jax.Array:
+    h = jax.lax.conv_general_dilated(
+        x, p[f"b{i}_dw"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+    h = jax.lax.conv_general_dilated(
+        h, p[f"b{i}_pw"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    mu = h.mean(axis=(0, 1, 2))
+    var = h.var(axis=(0, 1, 2))
+    h = (h - mu) * jax.lax.rsqrt(var + 1e-5)
+    h = h * p[f"b{i}_bn_scale"] + p[f"b{i}_bn_bias"]
+    return jax.nn.relu(x + h)
+
+
+def forward(cfg: XceptionConfig, params: Mapping, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, 3) -> logits (B, num_classes)."""
+    x = jax.lax.conv_general_dilated(
+        images, params["entry"], (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    x = jax.nn.relu(x + params["entry_b"])
+    for i in range(cfg.n_blocks):
+        x = _sep_block(params, i, x)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"] + params["head_b"]
+
+
+def loss_fn(cfg: XceptionConfig, params: Mapping, images: jax.Array, labels: jax.Array):
+    logits = forward(cfg, params, images)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == labels).mean()
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,291 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM recurrence (per head; q scaled by 1/sqrt(DK)):
+    m_t = max(lf_t + m_{t-1}, i_t)
+    C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(i_t - m_t) k_t v_t^T
+    n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(i_t - m_t) k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, 1)
+
+The chunkwise form below is algebraically identical (stabilizers included)
+and is the shape the Pallas kernel (kernels/mlstm_chunk) implements; the
+sequential form is retained as the decode step and the test oracle.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NULL, TP, ModelConfig, ParamDef, rmsnorm
+
+NEG = -1e30
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    dU = int(cfg.xlstm.proj_factor * cfg.d_model)  # up-projected width
+    NH = cfg.n_heads
+    return dU, dU // NH
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dU, DH = _mlstm_dims(cfg)
+    NH = cfg.n_heads
+    K = cfg.xlstm.conv
+    return {
+        "up_proj": ParamDef((d, 2 * dU), (NULL, TP)),
+        "conv_w": ParamDef((K, dU), (NULL, TP), scale=0.5),
+        "conv_b": ParamDef((dU,), (TP,), "zeros"),
+        "wq": ParamDef((dU, dU), (NULL, TP)),
+        "wk": ParamDef((dU, dU), (NULL, TP)),
+        "wv": ParamDef((dU, dU), (NULL, TP)),
+        "wi": ParamDef((dU, NH), (TP, NULL)),
+        "wf": ParamDef((dU, NH), (TP, NULL)),
+        "bi": ParamDef((NH,), (NULL,), "zeros"),
+        "bf": ParamDef((NH,), (NULL,), "ones"),   # bias toward remembering
+        "hnorm": ParamDef((dU,), (TP,), "ones"),
+        "down_proj": ParamDef((dU, d), (TP, NULL)),
+    }
+
+
+def mlstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    dU, DH = _mlstm_dims(cfg)
+    NH = cfg.n_heads
+    K = cfg.xlstm.conv
+    return {
+        "C": jax.ShapeDtypeStruct((batch, NH, DH, DH), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, NH, DH), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, NH), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, dU), cfg.compute_dtype),
+    }
+
+
+def _conv(cfg: ModelConfig, p: Mapping, x: jax.Array, state):
+    B, S, dU = x.shape
+    K = cfg.xlstm.conv
+    if state is None:
+        state = jnp.zeros((B, K - 1, dU), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    w = p["conv_w"].astype(x.dtype)
+    for k in range(K):
+        out = out + xp[:, k : k + S, :] * w[k]
+    return jax.nn.silu(out + p["conv_b"].astype(x.dtype)), xp[:, S:, :]
+
+
+def _qkvif(cfg: ModelConfig, p: Mapping, xm: jax.Array, xc: jax.Array):
+    """xm: conv path (B,S,dU); xc: raw up-projection (B,S,dU) for v."""
+    B, S, dU = xm.shape
+    NH = cfg.n_heads
+    DH = dU // NH
+    q = jnp.einsum("bsd,de->bse", xm, p["wq"].astype(xm.dtype)).reshape(B, S, NH, DH)
+    k = jnp.einsum("bsd,de->bse", xm, p["wk"].astype(xm.dtype)).reshape(B, S, NH, DH)
+    v = jnp.einsum("bsd,de->bse", xc, p["wv"].astype(xm.dtype)).reshape(B, S, NH, DH)
+    i = jnp.einsum("bsd,dh->bsh", xm, p["wi"].astype(xm.dtype)).astype(jnp.float32) + p["bi"].astype(jnp.float32)
+    f = jnp.einsum("bsd,dh->bsh", xm, p["wf"].astype(xm.dtype)).astype(jnp.float32) + p["bf"].astype(jnp.float32)
+    q = q * (DH ** -0.5)
+    return q, k, v, i, f
+
+
+def mlstm_sequential(q, k, v, i, f, C0, n0, m0):
+    """Oracle / decode path. q,k,v: (B,S,NH,DH); i,f: (B,S,NH) raw.
+    Returns (h (B,S,NH,DH), (C, n, m))."""
+    lf = jax.nn.log_sigmoid(f)
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it, lft = t
+        qt = qt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        m_new = jnp.maximum(lft + m, it)
+        a = jnp.exp(lft + m - m_new)[..., None]          # (B,NH,1)
+        b = jnp.exp(it - m_new)[..., None]
+        C = a[..., None] * C + b[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = a * n + b * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i, lf))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), (C, n, m)
+
+
+def _mlstm_chunk(q, k, v, i, lf, C0, n0, m0):
+    """One chunk, exact stabilized chunkwise form.
+
+    q,k,v: (B,L,NH,DH); i,lf: (B,L,NH) f32; carry C0 (B,NH,DH,DH),
+    n0 (B,NH,DH), m0 (B,NH). Returns (h, (C,n,m)).
+    """
+    B, L, NH, DH = q.shape
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B,NH,L,DH)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    it = i.transpose(0, 2, 1)                          # (B,NH,L)
+    lft = lf.transpose(0, 2, 1)
+
+    cum = jnp.cumsum(lft, axis=-1)                     # inclusive cumsum of log-forget
+    total = cum[..., -1:]
+
+    # intra-chunk decay D_ij = cum_i - cum_j + i_j  (j <= i)
+    Dm = cum[..., :, None] - cum[..., None, :] + it[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(tri, Dm, NEG)
+
+    g = cum + m0[..., None]                            # inter stabilizer input
+    m_row = jnp.maximum(jnp.max(Dm, axis=-1), g)       # (B,NH,L)
+
+    s = jnp.einsum("bhld,bhmd->bhlm", qf, kf)          # (B,NH,L,L)
+    s = s * jnp.exp(Dm - m_row[..., None])
+    inter_scale = jnp.exp(g - m_row)[..., None]        # (B,NH,L,1)
+    num = jnp.einsum("bhlm,bhmd->bhld", s, vf) + inter_scale * jnp.einsum(
+        "bhld,bhde->bhle", qf, C0
+    )
+    den = jnp.sum(s, axis=-1) + inter_scale[..., 0] * jnp.einsum("bhld,bhd->bhl", qf, n0)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+    # carry update
+    a = total - cum + it                               # (B,NH,L): decay j..L + gate
+    m_new = jnp.maximum(total[..., 0] + m0, jnp.max(a, axis=-1))
+    scale_old = jnp.exp(total[..., 0] + m0 - m_new)    # (B,NH)
+    w = jnp.exp(a - m_new[..., None])                  # (B,NH,L)
+    C = scale_old[..., None, None] * C0 + jnp.einsum("bhl,bhld,bhle->bhde", w, kf, vf)
+    n = scale_old[..., None] * n0 + jnp.einsum("bhl,bhld->bhd", w, kf)
+    return h.transpose(0, 2, 1, 3), (C, n, m_new)
+
+
+def mlstm_chunkwise(cfg, q, k, v, i, f, C0, n0, m0):
+    B, S, NH, DH = q.shape
+    lf = jax.nn.log_sigmoid(f)
+    L = min(cfg.xlstm.chunk, S)
+    if S % L != 0:
+        L = S
+    nc = S // L
+    if nc == 1:
+        return _mlstm_chunk(q, k, v, i, lf, C0, n0, m0)
+
+    split = lambda t: t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, args):
+        h, carry = _mlstm_chunk(*args, *carry)
+        return carry, h
+
+    carry, hs = jax.lax.scan(body, (C0, n0, m0), tuple(split(t) for t in (q, k, v, i, lf)))
+    return hs.swapaxes(0, 1).reshape(B, S, NH, DH), carry
+
+
+def mlstm_mixer(cfg: ModelConfig, p: Mapping, x: jax.Array, mode: str, cache=None):
+    """x: (B,S,d) -> (out, new_cache)."""
+    B, S, d = x.shape
+    dU, DH = _mlstm_dims(cfg)
+    NH = cfg.n_heads
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    xu, z = jnp.split(xz, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xm, new_conv = _conv(cfg, p, xu, conv_state)
+    q, k, v, i, f = _qkvif(cfg, p, xm, xu)
+
+    if cache is not None:
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    else:
+        C0 = jnp.zeros((B, NH, DH, DH), jnp.float32)
+        n0 = jnp.zeros((B, NH, DH), jnp.float32)
+        m0 = jnp.full((B, NH), 0.0, jnp.float32)
+
+    if mode == "decode":
+        h, (C, n, m) = mlstm_sequential(q, k, v, i, f, C0, n0, m0)
+    elif cfg.use_pallas:
+        from repro.kernels.mlstm_chunk import ops as mk_ops
+
+        h, (C, n, m) = mk_ops.mlstm_chunkwise(q, k, v, i, f, C0, n0, m0, chunk=cfg.xlstm.chunk)
+    else:
+        h, (C, n, m) = mlstm_chunkwise(cfg, q, k, v, i, f, C0, n0, m0)
+
+    h = h.reshape(B, S, dU).astype(x.dtype)
+    # headwise norm (rmsnorm over DH per head), then output gate
+    h = rmsnorm(h.reshape(B, S, NH, DH), jnp.ones((DH,), jnp.float32)).reshape(B, S, dU)
+    h = h * p["hnorm"].astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", h, p["down_proj"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": C, "n": n, "m": m, "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    NH = cfg.n_heads
+    DH = d // NH
+    return {
+        "w_gates": ParamDef((d, 4 * d), (NULL, NULL)),
+        "r_gates": ParamDef((NH, DH, 4 * DH), (NULL, NULL, NULL), scale=0.3),
+        "b_gates": ParamDef((4 * d,), (NULL,), "zeros"),
+        "out_proj": ParamDef((d, d), (NULL, TP)),
+        "hnorm": ParamDef((d,), (NULL,), "ones"),
+    }
+
+
+def slstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    NH = cfg.n_heads
+    DH = cfg.d_model // NH
+    sd = lambda: jax.ShapeDtypeStruct((batch, NH, DH), jnp.float32)
+    return {"c": sd(), "n": sd(), "h": sd(), "m": jax.ShapeDtypeStruct((batch, NH), jnp.float32)}
+
+
+def slstm_mixer(cfg: ModelConfig, p: Mapping, x: jax.Array, mode: str, cache=None):
+    """Sequential sLSTM with exponential gating and head-wise recurrence."""
+    B, S, d = x.shape
+    NH = cfg.n_heads
+    DH = d // NH
+    wx = jnp.einsum("bsd,de->bse", x, p["w_gates"].astype(x.dtype)).astype(jnp.float32)
+    wx = wx + p["b_gates"].astype(jnp.float32)
+    wx = wx.reshape(B, S, NH, 4 * DH)
+    R = p["r_gates"].astype(jnp.float32)
+
+    if cache is not None:
+        c0, n0, h0, m0 = cache["c"], cache["n"], cache["h"], cache["m"]
+    else:
+        # zeros to match slstm_cache_defs init (prefill/decode continuation
+        # must be exact); h_t divides by max(n, 1) so n0=0 is safe.
+        c0 = jnp.zeros((B, NH, DH), jnp.float32)
+        n0 = jnp.zeros((B, NH, DH), jnp.float32)
+        h0 = jnp.zeros((B, NH, DH), jnp.float32)
+        m0 = jnp.zeros((B, NH), jnp.float32)
+
+    def step(carry, wt):
+        c, n, h, m = carry
+        pre = wt + jnp.einsum("bhd,hde->bhe", h, R)          # (B,NH,4DH)
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        # scalar-per-cell exponential gating with stabilizer (max over cell dims)
+        i_s = jnp.max(it, axis=-1)                            # (B,NH) stabilizer proxy
+        f_s = jax.nn.log_sigmoid(jnp.max(ft, axis=-1))
+        m_new = jnp.maximum(f_s + m, i_s)
+        i_g = jnp.exp(it - m_new[..., None])
+        f_g = jnp.exp(jax.nn.log_sigmoid(ft) + m[..., None] - m_new[..., None])
+        z_g = jnp.tanh(zt)
+        o_g = jax.nn.sigmoid(ot)
+        c = f_g * c + i_g * z_g
+        n = f_g * n + i_g
+        h = o_g * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    hs = rmsnorm(hs, p["hnorm"])
+    out = jnp.einsum("bsd,de->bse", hs, p["out_proj"].astype(x.dtype))
+    new_cache = {"c": c, "n": n, "h": h, "m": m} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,141 @@
+"""Batched inference engine: prefill + decode with continuous batching.
+
+One engine instance backs one tier slice. Slots hold independent sequences;
+``step()`` admits waiting prompts into free slots (prefill, one at a time)
+and advances all active slots together (batched decode) — standard
+continuous batching (Orca/vLLM style) on a fixed slot count with a shared
+max_len cache.
+
+The jitted functions are built once per engine from the same step builders
+the dry-run lowers, so what serves here is what was dry-run there.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 4
+    max_len: int = 256
+    max_new_tokens: int = 32
+    eos_id: int = -1            # -1: never stop early
+
+
+@dataclass
+class Sequence:
+    sid: int
+    prompt: List[int]
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class InferenceEngine:
+    def __init__(self, cfg, ecfg: EngineConfig, ctx=None, params=None, seed: int = 0):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.ctx = ctx
+        self.model = get_model(cfg)
+        self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
+        B, L = ecfg.max_slots, ecfg.max_len
+        self.cache = self.model.init_cache(B, L)
+        self.slot_len = np.zeros(B, np.int32)        # tokens in cache per slot
+        self.slot_seq: List[Optional[Sequence]] = [None] * B
+        self.waiting: List[Sequence] = []
+        self._sid = 0
+        self._build()
+
+    # -- jitted steps ---------------------------------------------------------
+    def _build(self):
+        model, ctx = self.model, self.ctx
+        B, L = self.ecfg.max_slots, self.ecfg.max_len
+
+        def prefill_slot(params, cache, tokens, slot, n_valid):
+            """Prefill a single slot with a right-padded prompt of length L_p."""
+            tok2 = tokens[None, :]                                   # (1, Lp)
+            next_tok, mini = model.prefill(ctx, params, {"tokens": tok2}, cap=L)
+
+            def write(full, part):
+                # every cache leaf is (n_sb, B, ...); part has B=1 at axis 1
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, part.astype(full.dtype), slot, axis=1
+                )
+
+            cache = jax.tree.map(write, cache, mini)
+            return next_tok[0], cache
+
+        def decode_all(params, cache, last_tokens, lens):
+            """One decode step for every slot; per-slot lengths drive the
+            cache writes, masks and positions."""
+            batch = {"token": last_tokens[:, None], "cache_index": jnp.max(lens), "lengths": lens}
+            return model.decode(ctx, params, cache, batch)
+
+        self._prefill = jax.jit(prefill_slot)
+        self._decode = jax.jit(decode_all, donate_argnums=(1,))
+        self._last = np.zeros(B, np.int32)
+
+    # -- public API -------------------------------------------------------------
+    def submit(self, prompt: List[int]) -> int:
+        seq = Sequence(self._sid, list(prompt))
+        self._sid += 1
+        self.waiting.append(seq)
+        return seq.sid
+
+    def _admit(self) -> None:
+        for i in range(self.ecfg.max_slots):
+            if self.slot_seq[i] is None and self.waiting:
+                seq = self.waiting.pop(0)
+                toks = jnp.asarray(seq.prompt, jnp.int32)
+                nxt, self.cache = self._prefill(
+                    self.params, self.cache, toks, jnp.asarray(i), jnp.asarray(len(seq.prompt))
+                )
+                self.slot_seq[i] = seq
+                self.slot_len[i] = len(seq.prompt)
+                self._last[i] = int(nxt)
+                seq.out.append(int(nxt))
+
+    def step(self) -> List[Sequence]:
+        """Admit + one decode step; returns sequences finished this step."""
+        self._admit()
+        active = [i for i in range(self.ecfg.max_slots) if self.slot_seq[i] is not None]
+        finished: List[Sequence] = []
+        if active:
+            lens = jnp.asarray(self.slot_len)
+            nxt, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self._last), lens
+            )
+            nxt = np.asarray(nxt)
+            for i in active:
+                seq = self.slot_seq[i]
+                self.slot_len[i] += 1
+                self._last[i] = nxt[i]
+                seq.out.append(int(nxt[i]))
+                if (
+                    len(seq.out) >= self.ecfg.max_new_tokens
+                    or int(nxt[i]) == self.ecfg.eos_id
+                    or self.slot_len[i] >= self.ecfg.max_len - 1
+                ):
+                    seq.done = True
+                    finished.append(seq)
+                    self.slot_seq[i] = None
+                    self.slot_len[i] = 0
+        return finished
+
+    def generate(self, prompts: List[List[int]], max_steps: int = 10000) -> List[Sequence]:
+        """Synchronous convenience: run until all prompts finish."""
+        done: List[Sequence] = []
+        for p in prompts:
+            self.submit(p)
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.waiting and all(s is None for s in self.slot_seq):
+                break
+        return sorted(done, key=lambda s: s.sid)

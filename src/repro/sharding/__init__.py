@@ -1,0 +1,3 @@
+from repro.sharding.axes import MeshCtx, Rules, make_ctx
+
+__all__ = ["MeshCtx", "Rules", "make_ctx"]

@@ -1,0 +1,123 @@
+"""Logical-axis rules: map ParamDef logical axes onto mesh axes.
+
+The production mesh is ('data', 'model') single-pod or ('pod', 'data',
+'model') multi-pod; 'pod' simply extends the data-parallel axis. Tests run
+with ctx=None (single device) — every module must work in that mode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import EMBED, FSDP, NULL, STACK, TP, ParamDef
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    mesh: Any                      # jax.sharding.Mesh
+    batch_axes: Tuple[str, ...]    # axes that shard the batch (pod+data)
+    tp_axis: str                   # tensor/expert-parallel axis
+    fsdp_axis: str                 # optimizer/param fully-sharded axis
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(list(self.mesh.shape.values())))
+
+    def batch_spec_for(self, batch: int):
+        """Axis (or axes) to shard a batch dim of the given size, or None."""
+        if batch % self.dp_size == 0:
+            return self.batch_axes
+        # try a prefix of the batch axes (e.g. batch=2 on pod axis only)
+        for i in range(len(self.batch_axes) - 1, 0, -1):
+            sz = int(np.prod([self.mesh.shape[a] for a in self.batch_axes[:i]]))
+            if batch % sz == 0:
+                return self.batch_axes[:i]
+        return None
+
+    def size_of(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def data_spec(self, batch: int, ndim: int) -> P:
+        """PartitionSpec for a (batch, ...) data array."""
+        return P(self.batch_spec_for(batch), *([None] * (ndim - 1)))
+
+
+def make_ctx(mesh: Optional[Mesh]) -> Optional[MeshCtx]:
+    if mesh is None:
+        return None
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshCtx(mesh, ("pod", "data"), "model", "data")
+    return MeshCtx(mesh, ("data",), "model", "data")
+
+
+class Rules:
+    """Resolve ParamDef logical axes to PartitionSpecs on a given ctx."""
+
+    def __init__(self, ctx: Optional[MeshCtx], fsdp_params: bool = False):
+        self.ctx = ctx
+        self.fsdp_params = fsdp_params
+
+    def spec_for(self, d: ParamDef) -> P:
+        if self.ctx is None:
+            return P()
+        mapping = {
+            TP: self.ctx.tp_axis,
+            FSDP: self.ctx.fsdp_axis,
+            EMBED: None,
+            STACK: None,
+            NULL: None,
+        }
+        axes = [mapping.get(a) for a in d.axes]
+        # Drop shardings that do not divide the dim evenly.
+        out = []
+        for dim, ax in zip(d.shape, axes):
+            if ax is not None and dim % self.ctx.mesh.shape[ax] != 0:
+                ax = None
+            out.append(ax)
+        # Optional ZeRO-3/FSDP: additionally shard the largest unsharded dim
+        # over the fsdp axis (used for very large param trees).
+        if self.fsdp_params and self.ctx is not None:
+            fs = self.ctx.mesh.shape[self.ctx.fsdp_axis]
+            if self.ctx.fsdp_axis not in [a for a in out if a]:
+                cand = [
+                    (dim, i)
+                    for i, (dim, ax) in enumerate(zip(d.shape, out))
+                    if ax is None and dim % fs == 0 and dim >= 2 * fs
+                ]
+                if cand:
+                    _, i = max(cand)
+                    out[i] = self.ctx.fsdp_axis
+        return P(*out)
+
+    def spec_tree(self, defs: Any) -> Any:
+        return jax.tree.map(
+            self.spec_for, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+        )
+
+    def sharding_tree(self, defs: Any) -> Any:
+        if self.ctx is None:
+            return jax.tree.map(
+                lambda d: None, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+            )
+        return jax.tree.map(
+            lambda d: NamedSharding(self.ctx.mesh, self.spec_for(d)),
+            defs,
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )

@@ -1,0 +1,91 @@
+"""Gradient compression for cross-pod data parallelism.
+
+On the multi-pod mesh the gradient all-reduce crosses the (slow) inter-pod
+links. ``compressed_psum`` implements an int8 block-quantized all-reduce via
+shard_map: quantize locally -> all_gather int8 (+f32 block scales, ~1/128
+overhead) -> dequantize+sum locally. Wire bytes drop ~4x vs f32 (2x vs bf16)
+at the cost of (g-1)/g-fold gather vs reduce traffic; worthwhile when the
+pod axis is small (g=2: gather 1x vs reduce 2x wire => ~4x saving vs f32
+ring all-reduce). Error feedback (residual carrying) keeps training unbiased.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import QBLOCK
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array, int]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, pad: int, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compressed_allreduce_local(x: jax.Array, axis_name: str) -> jax.Array:
+    """Inside shard_map: int8 all-gather + local dequant-sum over axis_name."""
+    q, scale, pad = _quantize(x)
+    qs = jax.lax.all_gather(q, axis_name)          # (g, nb, QBLOCK) int8
+    ss = jax.lax.all_gather(scale, axis_name)      # (g, nb, 1) f32
+    g = qs.shape[0]
+    total = jnp.zeros(x.shape, jnp.float32)
+    for i in range(g):                              # g is small (pod axis)
+        total = total + _dequantize(qs[i], ss[i], pad, x.shape)
+    return total.astype(x.dtype)
+
+
+def make_compressed_psum(mesh, axis_name: str, inner_spec):
+    """Returns fn(x) = all-reduce of x over ``axis_name`` with int8 wire
+    format, leaving other axes untouched. inner_spec: PartitionSpec of x."""
+
+    def fn(x):
+        def body(x_l):
+            return compressed_allreduce_local(x_l, axis_name)
+
+        return _shard_map(
+            body, mesh=mesh, in_specs=(inner_spec,), out_specs=inner_spec, check_vma=False
+        )(x)
+
+    return fn
+
+
+class ErrorFeedback:
+    """Residual error feedback for biased compressors: carry the quantization
+    error into the next step (Karimireddy et al., 2019)."""
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any, compress_fn) -> Tuple[Any, Any]:
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            q, scale, pad = _quantize(corrected)
+            sent = _dequantize(q, scale, pad, corrected.shape)
+            new_r = corrected - sent
+            return compress_fn(sent.astype(g.dtype)), new_r
+
+        pairs = jax.tree.map(one, grads, residual)
+        outs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return outs, res

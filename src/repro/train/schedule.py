@@ -1,0 +1,32 @@
+"""Learning-rate schedules (pure functions of step)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class WarmupCosine:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    final_frac: float = 0.1
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * step / max(1, self.warmup_steps)
+        prog = jnp.clip(
+            (step - self.warmup_steps) / max(1, self.total_steps - self.warmup_steps), 0.0, 1.0
+        )
+        cos = self.peak_lr * (self.final_frac + (1 - self.final_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < self.warmup_steps, warm, cos)
+
+
+@dataclass(frozen=True)
+class Constant:
+    lr: float = 3e-4
+
+    def __call__(self, step):
+        return jnp.asarray(self.lr, jnp.float32)

@@ -1,0 +1,100 @@
+"""Training loop: jit'd step, checkpoint/restart, preemption handling.
+
+Fault-tolerance contract (exercised by tests + examples):
+  * checkpoint every N steps (atomic, manifest'd);
+  * on start, auto-resume from the latest checkpoint (exact data-iterator
+    state comes from the step counter — SyntheticLM/FileTokens are
+    deterministic in (seed, step, shard));
+  * SIGTERM/preemption => save-and-exit cleanly (save_on_exit);
+  * restart reproduces the loss trajectory bit-for-bit on CPU (test).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, make_source
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.schedule import Constant
+from repro.launch.steps import make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    opt: OptConfig = field(default_factory=OptConfig)
+
+
+class Trainer:
+    def __init__(self, model, ctx, tcfg: TrainConfig, dcfg: DataConfig, schedule=None):
+        self.model = model
+        self.ctx = ctx
+        self.tcfg = tcfg
+        self.dcfg = dcfg
+        self.schedule = schedule or Constant(tcfg.opt.lr)
+        self.source = make_source(dcfg)
+        self.history: List[Dict[str, float]] = []
+        self._preempted = False
+
+        step_fn = make_train_step(model, ctx, tcfg.opt, schedule=self.schedule)
+        self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -- preemption ---------------------------------------------------------
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, params: Any = None, seed: int = 0) -> Dict[str, Any]:
+        tcfg = self.tcfg
+        start_step = 0
+        opt_state = None
+        if tcfg.ckpt_dir:
+            last = ckpt.latest_step(tcfg.ckpt_dir)
+            if last is not None:
+                params = self.model.init(jax.random.PRNGKey(seed))  # structure
+                opt_state = init_opt_state(params, tcfg.opt)
+                state = ckpt.restore(tcfg.ckpt_dir, last, {"p": params, "o": opt_state})
+                params, opt_state = state["p"], state["o"]
+                start_step = last
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        if opt_state is None:
+            opt_state = init_opt_state(params, tcfg.opt)
+
+        t0 = time.time()
+        step = start_step
+        for step in range(start_step, tcfg.steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in self.source.batch_at(step).items()}
+            params, opt_state, metrics = self._jit_step(params, opt_state, batch)
+            if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items() if hasattr(v, "shape") or isinstance(v, (int, float))}
+                m["step"] = step
+                self.history.append(m)
+            if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+                ckpt.save(tcfg.ckpt_dir, step + 1, {"p": params, "o": opt_state},
+                          meta={"data_step": step + 1})
+            if self._preempted:
+                if tcfg.ckpt_dir:
+                    ckpt.save(tcfg.ckpt_dir, step + 1, {"p": params, "o": opt_state},
+                              meta={"preempted": True})
+                break
+        return {
+            "params": params,
+            "opt_state": opt_state,
+            "history": self.history,
+            "steps_done": step + 1,
+            "wall_s": time.time() - t0,
+            "preempted": self._preempted,
+        }

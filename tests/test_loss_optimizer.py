@@ -1,0 +1,108 @@
+"""Chunked vocab-parallel CE vs naive; AdamW (f32/bf16/int8 states)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models.loss import IGNORE, lm_loss, next_tokens
+from repro.train.optimizer import (
+    OptConfig,
+    adamw_update,
+    dequantize_blockwise,
+    global_norm,
+    init_opt_state,
+    opt_state_shapes,
+    quantize_blockwise,
+)
+
+CFG = ModelConfig(
+    name="t", family="dense", n_layers=1, d_model=32, n_heads=4, n_kv_heads=4,
+    d_ff=64, vocab_size=96, param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    ce_chunks=4,
+)
+
+
+def _naive_ce(hidden, w, labels):
+    logits = (hidden @ w).astype(jnp.float32)
+    z = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    valid = labels != IGNORE
+    return jnp.where(valid, z - ll, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+
+
+def test_chunked_ce_matches_naive_value_and_grad():
+    rng = jax.random.PRNGKey(0)
+    B, S, d, V = 2, 16, 32, 96
+    hidden = jax.random.normal(rng, (B, S, d), jnp.float32)
+    params = {"unembed": jax.random.normal(rng, (d, V), jnp.float32) * 0.1,
+              "embedding": jnp.zeros((V, d))}
+    labels = jax.random.randint(rng, (B, S), 0, V).at[0, :3].set(IGNORE)
+
+    def mine(w):
+        loss, _ = lm_loss(CFG, None, {**params, "unembed": w}, hidden, labels, z_weight=0.0)
+        return loss
+
+    def naive(w):
+        return _naive_ce(hidden, w, labels)
+
+    v0, g0 = jax.value_and_grad(mine)(params["unembed"])
+    v1, g1 = jax.value_and_grad(naive)(params["unembed"])
+    assert abs(float(v0 - v1)) < 1e-5
+    assert float(jnp.max(jnp.abs(g0 - g1))) < 1e-5
+
+
+def test_next_tokens_equals_full_argmax():
+    rng = jax.random.PRNGKey(1)
+    hidden = jax.random.normal(rng, (3, 5, 32), jnp.float32)
+    params = {"unembed": jax.random.normal(rng, (32, 96), jnp.float32),
+              "embedding": jnp.zeros((96, 32))}
+    got = next_tokens(CFG, None, params, hidden)
+    want = jnp.argmax(hidden[:, -1] @ params["unembed"], axis=-1)
+    assert jnp.array_equal(got, want.astype(jnp.int32))
+
+
+def test_blockwise_quant_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1000,), jnp.float32) * 5
+    qs = quantize_blockwise(x)
+    back = dequantize_blockwise(qs, x.shape)
+    assert float(jnp.max(jnp.abs(back - x))) < 5 * 2 / 127 + 1e-3
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges_on_quadratic(state_dtype):
+    ocfg = OptConfig(lr=0.1, weight_decay=0.0, clip_norm=0.0, state_dtype=state_dtype)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    opt = init_opt_state(params, ocfg)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05, state_dtype
+
+
+def test_grad_clip_bounds_update():
+    ocfg = OptConfig(lr=1.0, weight_decay=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    opt = init_opt_state(params, ocfg)
+    _, _, stats = adamw_update({"w": jnp.asarray([1e6, 0.0, 0.0])}, opt, params, ocfg)
+    assert float(stats["grad_norm"]) > 1e5  # reported raw
+
+
+def test_opt_state_shapes_match_init():
+    params = {"a": jnp.zeros((7, 5)), "b": jnp.zeros((300,))}
+    for sd in ("float32", "bfloat16", "int8"):
+        ocfg = OptConfig(state_dtype=sd)
+        st = init_opt_state(params, ocfg)
+        shp = opt_state_shapes(params, ocfg)
+        got = jax.tree.map(lambda x: (tuple(x.shape), str(x.dtype)), st)
+        want = jax.tree.map(lambda x: (tuple(x.shape), str(x.dtype)), shp)
+        assert got == want, sd
+
+
+def test_schedule_warmup_cosine():
+    from repro.train.schedule import WarmupCosine
+
+    s = WarmupCosine(peak_lr=1.0, warmup_steps=10, total_steps=100, final_frac=0.1)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 0.11
+    assert float(s(100)) == pytest.approx(0.1, abs=1e-3)

@@ -1,0 +1,129 @@
+"""Algorithm 1 unit + property tests (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    PlacementDecision,
+    Request,
+    StraightLinePolicy,
+    Thresholds,
+    Tier,
+    placing_batch_jax,
+)
+
+
+def req(rid=0, size=1e5):
+    return Request(rid=rid, arrival_t=0.0, data_size=size)
+
+
+POL = StraightLinePolicy(Thresholds(F=1000, D=1e6))
+
+
+def test_line3_burst_small_payload_goes_serverless():
+    d = POL.place(req(size=1e5), f_t=2000, flask_free=5, docker_free=5)
+    assert d.tier == Tier.SERVERLESS
+
+
+def test_line6_large_payload_goes_docker_even_in_burst():
+    d = POL.place(req(size=5e6), f_t=2000, flask_free=5, docker_free=5)
+    assert d.tier == Tier.DOCKER
+
+
+def test_line10_moderate_goes_flask_when_available():
+    d = POL.place(req(size=1e5), f_t=100, flask_free=1, docker_free=5)
+    assert d.tier == Tier.FLASK
+
+
+def test_line14_flask_exhausted_goes_docker():
+    d = POL.place(req(size=1e5), f_t=100, flask_free=0, docker_free=1)
+    assert d.tier == Tier.DOCKER
+
+
+def test_line18_everything_busy_goes_serverless():
+    d = POL.place(req(size=1e5), f_t=100, flask_free=0, docker_free=0)
+    assert d.tier == Tier.SERVERLESS
+
+
+def test_place_all_consumes_availability():
+    reqs = [req(rid=i, size=1e5) for i in range(5)]
+    ds = POL.place_all(reqs, f_t=100, flask_free=2, docker_free=2)
+    tiers = [d.tier for d in ds]
+    assert tiers[:2] == [Tier.FLASK, Tier.FLASK]
+    assert tiers[2:4] == [Tier.DOCKER, Tier.DOCKER]
+    assert tiers[4] == Tier.SERVERLESS
+
+
+@given(
+    f_t=st.floats(0, 1e4),
+    sizes=st.lists(st.floats(1.0, 1e8), min_size=1, max_size=40),
+    flask_free=st.integers(0, 10),
+    docker_free=st.integers(0, 10),
+)
+@settings(max_examples=60, deadline=None)
+def test_every_request_placed_on_valid_tier(f_t, sizes, flask_free, docker_free):
+    reqs = [req(rid=i, size=s) for i, s in enumerate(sizes)]
+    ds = POL.place_all(reqs, f_t, flask_free, docker_free)
+    assert len(ds) == len(reqs)                       # exactly one decision each
+    assert {d.rid for d in ds} == set(range(len(reqs)))
+    for d, r in zip(ds, reqs):
+        assert d.tier in (Tier.FLASK, Tier.DOCKER, Tier.SERVERLESS)
+        # faithful threshold semantics
+        if f_t > POL.th.F and r.data_size < POL.th.D:
+            assert d.tier == Tier.SERVERLESS
+        elif r.data_size > POL.th.D:
+            assert d.tier == Tier.DOCKER
+    assert sum(d.tier == Tier.FLASK for d in ds) <= flask_free
+
+
+@given(
+    f_t=st.floats(0, 1e4),
+    sizes=st.lists(st.floats(1.0, 1e8), min_size=1, max_size=32),
+    flask_free=st.integers(0, 8),
+    docker_free=st.integers(0, 8),
+)
+@settings(max_examples=40, deadline=None)
+def test_vectorized_jax_matches_python_loop(f_t, sizes, flask_free, docker_free):
+    reqs = [req(rid=i, size=s) for i, s in enumerate(sizes)]
+    ds = POL.place_all(reqs, f_t, flask_free, docker_free)
+    got = placing_batch_jax(
+        jnp.float32(f_t),
+        jnp.asarray(sizes, jnp.float32),
+        jnp.int32(flask_free),
+        jnp.int32(docker_free),
+        F=POL.th.F,
+        D=POL.th.D,
+    )
+    assert [int(t) for t in got] == [int(d.tier) for d in ds]
+
+
+def test_adaptive_thresholds_move_with_utilization():
+    from repro.core.placing import AdaptiveThresholds
+
+    at = AdaptiveThresholds(Thresholds(F=1200, D=1e6), interactive_capacity_rps=7.0)
+    th_idle = at.update(0.1, docker_service_s=0.8, flask_service_s=0.15)
+    f_idle = th_idle.F
+    for _ in range(30):
+        th_busy = at.update(1.0, docker_service_s=0.8, flask_service_s=0.15)
+    assert th_busy.F < f_idle           # saturated interactive => lower F
+    assert th_busy.D > 0
+
+
+def test_slo_aware_policy_picks_cheapest_meeting_slo():
+    from repro.core.placing import SLOAwarePolicy
+
+    models = {
+        Tier.FLASK: lambda r, f: 0.2,
+        Tier.DOCKER: lambda r, f: 0.8,
+        Tier.SERVERLESS: lambda r, f: 0.5,
+    }
+    pol = SLOAwarePolicy(models, cost=(1.0, 0.6, 0.3))
+    r = req(size=1e5)
+    r.slo_s = 0.6
+    d = pol.place(r, f_t=10, flask_free=1, docker_free=1)
+    assert d.tier == Tier.SERVERLESS    # cheapest meeting 0.6 s
+    r.slo_s = 0.3
+    d = pol.place(r, f_t=10, flask_free=1, docker_free=1)
+    assert d.tier == Tier.FLASK         # only flask meets 0.3 s

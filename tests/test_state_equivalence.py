@@ -1,0 +1,87 @@
+"""Prefill+decode must continue exactly from the full-sequence forward —
+the invariant continuous batching rests on (mamba / mlstm / slstm / attn)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import MambaCfg, ModelConfig, XLSTMCfg
+from repro.models import mamba as mam
+from repro.models import xlstm as xl
+from repro.models.common import init_tree
+
+CFG = ModelConfig(
+    name="t", family="hybrid", n_layers=1, d_model=16, n_heads=4, n_kv_heads=2,
+    d_ff=32, vocab_size=64,
+    mamba=MambaCfg(d_state=4, d_conv=4, expand=2, chunk=4),
+    xlstm=XLSTMCfg(chunk=4),
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+)
+
+
+def _zeros_cache(defs):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), defs)
+
+
+@pytest.mark.parametrize(
+    "name,defs_fn,cache_fn,mixer",
+    [
+        ("mamba", mam.mamba_defs, mam.mamba_cache_defs, mam.mamba_mixer),
+        ("mlstm", xl.mlstm_defs, xl.mlstm_cache_defs, xl.mlstm_mixer),
+        ("slstm", xl.slstm_defs, xl.slstm_cache_defs, xl.slstm_mixer),
+    ],
+)
+def test_mixer_prefill_decode_continuation(name, defs_fn, cache_fn, mixer):
+    rng = jax.random.PRNGKey(1)
+    x = jax.random.normal(rng, (2, 8, 16), jnp.float32)
+    p = init_tree(rng, defs_fn(CFG), jnp.float32)
+    y_full, _ = mixer(CFG, p, x, "train", None)
+    cache = _zeros_cache(cache_fn(CFG, 2))
+    y_pre, cache = mixer(CFG, p, x[:, :5], "prefill", cache)
+    assert float(jnp.max(jnp.abs(y_pre - y_full[:, :5]))) < 1e-5
+    for t in range(5, 8):
+        y_t, cache = mixer(CFG, p, x[:, t : t + 1], "decode", cache)
+        assert float(jnp.max(jnp.abs(y_t[:, 0] - y_full[:, t]))) < 1e-4, (name, t)
+
+
+def test_attention_chunked_equals_naive():
+    from repro.models.attention import chunked_attention
+
+    cfg = CFG.replace(attn_chunk=4)
+    rng = jax.random.PRNGKey(2)
+    B, S, H, KV, hd = 2, 16, 4, 2, 8
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out_c = chunked_attention(cfg, q, k, v, pos, pos, causal=True)
+    out_1 = chunked_attention(cfg.replace(attn_chunk=S), q, k, v, pos, pos, causal=True)
+    assert float(jnp.max(jnp.abs(out_c - out_1))) < 1e-5
+
+
+def test_int8_kv_decode_close_to_bf16():
+    from repro.configs.registry import get_config
+    from repro.models import get_model
+
+    cfg = get_config("glm4-9b", smoke=True).replace(attn_chunk=64)
+    model = get_model(cfg)
+    modelq = get_model(cfg.replace(kv_quant=True))
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    t0, c0 = model.prefill(None, params, {"tokens": toks}, cap=16)
+    t1, c1 = modelq.prefill(None, params, {"tokens": toks}, cap=16)
+    # int8 quantization error shouldn't flip the greedy token on random data
+    assert jnp.array_equal(t0, t1)
+    d0, _ = model.decode(None, params, c0, {"token": t0[:, None], "cache_index": jnp.asarray(12)})
+    d1, _ = modelq.decode(None, params, c1, {"token": t1[:, None], "cache_index": jnp.asarray(12)})
+    assert jnp.array_equal(d0, d1)
+
+
+def test_quantize_kv_roundtrip_error_bounded():
+    from repro.models.attention import dequantize_kv, quantize_kv
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 7, 3, 16), jnp.float32) * 3.0
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02

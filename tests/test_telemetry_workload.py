@@ -1,0 +1,164 @@
+"""Telemetry, workload generators, HLO analyzer, estimator, router."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.telemetry import FrequencyEstimator, Metrics, percentile
+from repro.core.workload import burst, poisson, ramp
+
+
+def test_window_frequency_counts_exactly():
+    fe = FrequencyEstimator(window_s=10.0)
+    for t in [0.0, 1.0, 2.0, 3.0]:
+        fe.observe(t)
+    assert fe.frequency(3.0) == 4
+    assert fe.frequency(11.5) == 2   # window (1.5, 11.5]: observations 2,3 remain
+    assert fe.frequency(20.0) == 0
+
+
+def test_ewma_tracks_rate_changes():
+    fe = FrequencyEstimator(window_s=1.0, mode="ewma", halflife_s=1.0)
+    t = 0.0
+    for _ in range(200):     # 10 rps
+        t += 0.1
+        fe.observe(t)
+    slow = fe.frequency(t)
+    for _ in range(400):     # 100 rps
+        t += 0.01
+        fe.observe(t)
+    fast = fe.frequency(t)
+    assert fast > 3 * slow
+
+
+@given(st.lists(st.floats(0, 100), min_size=1, max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_percentile_bounds(xs):
+    assert min(xs) <= percentile(xs, 50) <= max(xs)
+    assert percentile(xs, 100) == max(xs)
+
+
+def test_ramp_properties():
+    reqs = ramp(1000, duration_s=180.0, seed=0)
+    assert len(reqs) == 1000
+    ts = [r.arrival_t for r in reqs]
+    assert ts == sorted(ts) and 0 <= ts[0] and ts[-1] <= 180.0
+    # linearly increasing rate: second half has more arrivals than first
+    first = sum(1 for t in ts if t < 90)
+    assert first < 450
+
+
+def test_poisson_rate_roughly_matches():
+    reqs = poisson(50.0, duration_s=100.0, seed=1)
+    assert 4000 < len(reqs) < 6000
+
+
+def test_burst_shape():
+    reqs = burst(1.0, 100.0, burst_at_s=50, burst_len_s=10, seed=2)
+    in_burst = sum(1 for r in reqs if 50 <= r.arrival_t <= 60)
+    out_burst = len(reqs) - in_burst
+    assert in_burst > 3 * out_burst
+
+
+def test_estimator_monotonicity():
+    from repro.core.estimator import LatencyEstimator, SliceProfile, xception_profile
+
+    app = xception_profile()
+    s1 = SliceProfile(chips=1)
+    s8 = SliceProfile(chips=8)
+    t1 = LatencyEstimator.service_time(app, 4.0, s1)
+    t8 = LatencyEstimator.service_time(app, 4.0, s8)
+    assert t8 < t1
+    assert LatencyEstimator.service_time(app, 8.0, s1) > t1
+    assert LatencyEstimator.cold_start(app, s1) > 0.5   # ~110 MB at 150 MB/s
+
+
+def test_estimator_reads_dryrun_records():
+    from repro.core.estimator import LatencyEstimator
+
+    est = LatencyEstimator("benchmarks/results/dryrun")
+    t = est.step_time("glm4-9b", "decode_32k")
+    if t is not None:          # present once the sweep has run
+        assert 0 < t < 10
+
+
+def test_router_online_with_fake_clock():
+    from repro.core.request import Request, Tier
+    from repro.core.router import Backend, StraightLineRouter
+
+    now = [0.0]
+    clock = lambda: now[0]
+    calls = {"f": 0, "d": 0, "s": 0}
+
+    def mk(key):
+        def run(req):
+            calls[key] += 1
+            now[0] += 0.01
+            return f"{key}:{req.rid}"
+        return run
+
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, mk("f"), capacity=1),
+            Tier.DOCKER: Backend(Tier.DOCKER, mk("d"), capacity=2),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, mk("s"), capacity=100),
+        },
+        clock=clock,
+    )
+    for i in range(5):
+        router.submit(Request(rid=i, arrival_t=0.0, data_size=1e5))
+        now[0] += 0.05
+    router.drain()
+    assert router.metrics.total == 5 and router.metrics.failure_rate == 0.0
+    assert len(router.results) == 5
+    assert calls["f"] > 0
+
+
+def test_router_retries_failed_tier_on_elastic():
+    from repro.core.request import Request, Tier
+    from repro.core.router import Backend, StraightLineRouter
+
+    now = [0.0]
+
+    def boom(req):
+        raise RuntimeError("tier down")
+
+    def ok(req):
+        return "ok"
+
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, boom, capacity=1),
+            Tier.DOCKER: Backend(Tier.DOCKER, boom, capacity=1),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, ok, capacity=10),
+        },
+        clock=lambda: now[0],
+    )
+    router.submit(Request(rid=0, arrival_t=0.0, data_size=1e5))
+    router.drain()
+    assert router.metrics.failure_rate == 0.0   # failover saved it
+    assert router.results[0] == "ok"
+
+
+def test_hlo_analyzer_on_scan_program():
+    """The trip-count correction: a 8-iteration scan of a matmul must count
+    ~8x the flops of its body (cost_analysis alone counts it once)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.hlo_analysis import HloCost
+
+    L, B, D, F = 8, 4, 32, 64
+
+    def model(x, w):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        x, _ = jax.lax.scan(body, x, w)
+        return x.sum()
+
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    compiled = jax.jit(model).lower(x, w).compile()
+    cost = HloCost(compiled.as_text(), 1).cost()
+    analytic = L * 2 * B * D * D
+    assert 0.9 * analytic <= cost["flops"] <= 1.2 * analytic, (cost["flops"], analytic)
