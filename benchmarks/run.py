@@ -15,6 +15,7 @@ def main() -> None:
         fig6_7_platforms,
         fig8_response,
         microbench,
+        paged_decode,
         placement,
         roofline,
     )
@@ -28,6 +29,7 @@ def main() -> None:
         ("fig3_training", fig3_training),
         ("roofline", roofline),
         ("microbench", microbench),
+        ("paged_decode", paged_decode),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,10 +1,15 @@
 """End-to-end driver (the paper's kind: serving): batched requests through
-the StraightLine router onto three REAL JAX inference backends.
+the StraightLine router onto three REAL JAX inference backends — with the
+placer consuming LIVE capacity from the paged serving engines.
 
 Tiers (DESIGN.md §2):
-  interactive — 1-slot engine, lowest latency, tiny capacity
-  batch       — 4-slot continuous-batching engine (+activation overhead)
+  interactive — 1-slot paged engine, lowest latency, tiny page pool
+  batch       — 8-slot paged engine over a shared KV page pool
   elastic     — engines spun up on demand (cold start = init + weight load)
+
+Algorithm 1's S_F/S_D availability checks pull through a CapacityGauge fed
+by each engine's ``admission_capacity()`` (free slots bounded by free KV
+pages), not static capacity constants.
 
     PYTHONPATH=src python examples/serve_hybrid.py
 """
@@ -13,24 +18,39 @@ import time
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import Request, StraightLinePolicy, Thresholds, Tier
+from repro.core import CapacityGauge, Request, StraightLinePolicy, Thresholds, Tier
 from repro.core.router import Backend, StraightLineRouter
-from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.engine import PagedEngineConfig, PagedInferenceEngine
 
 CFG = get_config("smollm-360m", smoke=True).replace(attn_chunk=64)
-MAXLEN, NEW = 96, 8
+MAXLEN, NEW, PROMPT = 96, 8, 8
+PS = 16
 
 t0 = time.time()
-interactive = InferenceEngine(CFG, EngineConfig(max_slots=1, max_len=MAXLEN, max_new_tokens=NEW))
-batch_tier = InferenceEngine(CFG, EngineConfig(max_slots=4, max_len=MAXLEN, max_new_tokens=NEW))
+interactive = PagedInferenceEngine(
+    CFG, PagedEngineConfig(page_size=PS, num_pages=1 + MAXLEN // PS, max_slots=1,
+                           max_seq_len=MAXLEN, max_new_tokens=NEW)
+)
+batch_tier = PagedInferenceEngine(
+    CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 4 * MAXLEN // PS, max_slots=8,
+                           max_seq_len=MAXLEN, max_new_tokens=NEW),
+    params=interactive.params,
+)
 print(f"warm tiers ready in {time.time()-t0:.1f}s")
+print(f"batch tier: {batch_tier.capacity_now()}")
+
+# live capacity feedback: the placer sees each engine's measured admission
+# capacity (slots bounded by free pages), not a hardcoded constant
+gauge = CapacityGauge()
+gauge.register("flask", lambda: interactive.admission_capacity(PROMPT + NEW))
+gauge.register("docker", lambda: batch_tier.admission_capacity(PROMPT + NEW))
 
 elastic_pool = []
 
 
 def run_on(engine):
     def run(req: Request):
-        prompt = list(np.random.default_rng(req.rid).integers(1, CFG.vocab_size, 8))
+        prompt = list(np.random.default_rng(req.rid).integers(1, CFG.vocab_size, PROMPT))
         seqs = engine.generate([prompt])
         return seqs[0].out
     return run
@@ -41,7 +61,11 @@ def elastic_run(req: Request):
     if not elastic_pool:
         t = time.time()
         elastic_pool.append(
-            InferenceEngine(CFG, EngineConfig(max_slots=2, max_len=MAXLEN, max_new_tokens=NEW))
+            PagedInferenceEngine(
+                CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS,
+                                       max_slots=4, max_seq_len=MAXLEN, max_new_tokens=NEW),
+                params=interactive.params,
+            )
         )
         print(f"  [elastic cold start: {time.time()-t:.1f}s]")
     return run_on(elastic_pool[0])(req)
@@ -49,8 +73,10 @@ def elastic_run(req: Request):
 
 router = StraightLineRouter(
     {
-        Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8),
-        Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64),
+        Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8,
+                            capacity_fn=lambda: gauge.free("flask")),
+        Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64,
+                             capacity_fn=lambda: gauge.free("docker")),
         Tier.SERVERLESS: Backend(Tier.SERVERLESS, elastic_run, capacity=16),
     },
     policy=StraightLinePolicy(Thresholds(F=10, D=4096)),   # scaled-down thresholds
@@ -69,5 +95,7 @@ m = router.metrics
 print(f"\n{N} requests: {m.summary()}")
 by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
 print("placement:", by_tier)
+print("live capacity after drain:", gauge.snapshot())
 assert m.total == N and m.failure_rate == 0.0
-print("OK — all requests served by real JAX engines through Algorithm 1")
+print("OK — all requests served by real JAX paged engines through Algorithm 1,")
+print("     with S_F/S_D read live from engine page pools")

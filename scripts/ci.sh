@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: install pinned dev deps (so hypothesis-based modules can't
+# silently fail collection again) and run the repo's verify command.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q --retries 1 --timeout 5 -r requirements-dev.txt \
+    || echo "ci.sh: pip install failed (offline?); continuing with preinstalled deps" >&2
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -15,11 +15,12 @@ from repro.core.placing import (
 )
 from repro.core.request import PlacementDecision, Request, Tier
 from repro.core.simulator import SimConfig, Simulation
-from repro.core.telemetry import FrequencyEstimator, Metrics
+from repro.core.telemetry import CapacityGauge, FrequencyEstimator, Metrics
 from repro.core.tiers import TierConfig, TierSim
 
 __all__ = [
     "AdaptiveThresholds",
+    "CapacityGauge",
     "FrequencyEstimator",
     "Metrics",
     "PlacementDecision",

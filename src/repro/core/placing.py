@@ -51,14 +51,16 @@ class StraightLinePolicy:
         return PlacementDecision(req.rid, Tier.SERVERLESS, "all busy")  # line 18
 
     def place_all(self, reqs: Sequence[Request], f_t: float, flask_free: int, docker_free: int):
-        """Paper's batch form: place a waiting queue R, consuming availability."""
+        """Paper's batch form: place a waiting queue R, consuming availability.
+        Every docker placement consumes docker availability — including the
+        unconditional large-payload path — keyed on the decision tier."""
         out: List[PlacementDecision] = []
         ff, df = flask_free, docker_free
         for r in reqs:
             d = self.place(r, f_t, ff, df)
             if d.tier == Tier.FLASK:
                 ff -= 1
-            elif d.tier == Tier.DOCKER and "S_D" in d.reason:
+            elif d.tier == Tier.DOCKER:
                 df -= 1
             out.append(d)
         return out
@@ -158,7 +160,11 @@ def placing_batch_jax(
     flask_rank = jnp.cumsum(want_flask.astype(jnp.int32)) - 1
     got_flask = want_flask & (flask_rank < flask_free)
     want_docker2 = want_flask & ~got_flask
-    docker_rank = jnp.cumsum(want_docker2.astype(jnp.int32)) - 1
+    # docker availability is consumed by every docker placement — large
+    # payloads included. A docker2 candidate succeeds iff prior docker
+    # consumers (bigs + earlier candidates, all of which succeed until the
+    # pool is dry and none after) leave headroom.
+    docker_rank = jnp.cumsum((big | want_docker2).astype(jnp.int32)) - 1
     got_docker2 = want_docker2 & (docker_rank < docker_free)
     tier = jnp.where(
         burst,

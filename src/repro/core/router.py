@@ -12,8 +12,9 @@ deadline — first result wins).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, Optional
 
 from repro.core.placing import StraightLinePolicy
 from repro.core.request import Request, Tier
@@ -22,14 +23,35 @@ from repro.core.telemetry import FrequencyEstimator, Metrics
 
 @dataclass
 class Backend:
-    """A live tier: run(req) executes synchronously and returns the result."""
+    """A live tier: run(req) executes synchronously and returns the result.
+
+    ``capacity_fn`` is an optional live probe (e.g. the paged engine's
+    ``admission_capacity``): when set, the placer sees the tier's measured
+    free capacity instead of the static ``capacity`` constant.
+    """
 
     tier: Tier
     run: Callable[[Request], object]
     capacity: int = 1            # concurrent requests the tier accepts
     queue_cap: int = 64
     inflight: int = 0
-    queue: List[Request] = field(default_factory=list)
+    queue: Deque[Request] = field(default_factory=deque)
+    capacity_fn: Optional[Callable[[], int]] = None
+
+    def free(self) -> int:
+        """Free capacity for Algorithm 1's availability check. A live probe
+        reports requests admittable NOW (already net of running work — e.g.
+        the paged engine's admission_capacity), so it is used as-is; the
+        static constant must have in-flight work subtracted. Queue headroom
+        is NOT availability (a tier with every worker busy is busy, however
+        long its backlog may be). A probe returning None (e.g. a
+        CapacityGauge whose source unregistered) falls back to the static
+        constant."""
+        if self.capacity_fn is not None:
+            live = self.capacity_fn()
+            if live is not None:
+                return max(0, int(live))
+        return max(0, self.capacity - self.inflight)
 
 
 class StraightLineRouter:
@@ -52,8 +74,7 @@ class StraightLineRouter:
         self.results: Dict[int, object] = {}
 
     def _free(self, t: Tier) -> int:
-        b = self.backends[t]
-        return max(0, b.capacity - b.inflight) + max(0, b.queue_cap - len(b.queue))
+        return self.backends[t].free()
 
     def submit(self, req: Request) -> Tier:
         now = self.clock()
@@ -100,8 +121,12 @@ class StraightLineRouter:
         number executed."""
         ran = 0
         for b in self.backends.values():
+            # dispatch paces on the static concurrency limit, NOT the live
+            # probe: placement (free()) may refuse NEW work when a probe
+            # reports 0, but work already queued here must still drain —
+            # a probe stuck at 0 must never strand queued requests
             while b.queue and b.inflight < b.capacity:
-                req = b.queue.pop(0)
+                req = b.queue.popleft()
                 if (
                     self.hedge_after_s is not None
                     and not req.hedged

@@ -93,7 +93,7 @@ class Simulation:
         else:
             tier.busy -= 1
             if tier.queue:
-                nxt = tier.queue.pop(0)
+                nxt = tier.queue.popleft()
                 if now - nxt.arrival_t > nxt.timeout_s:
                     self._fail(nxt, now, "timeout-in-queue")
                 else:

@@ -1,16 +1,21 @@
-"""Request-frequency estimation and metrics aggregation.
+"""Request-frequency estimation, live capacity feedback, metrics aggregation.
 
-The paper's Algorithm 1 consumes f_t — "request frequency at time t". We
-estimate it two ways (selectable): a sliding count window (matches the
-paper's 'requests per 180 s' load metric) and an EWMA of instantaneous rate
-(smoother under bursts); plus percentile aggregation for the evaluation.
+The paper's Algorithm 1 consumes f_t — "request frequency at time t" — and
+the availability sets S_F / S_D. We estimate f_t two ways (selectable): a
+sliding count window (matches the paper's 'requests per 180 s' load metric)
+and an EWMA of instantaneous rate (smoother under bursts). ``CapacityGauge``
+closes the availability side of the loop: serving engines register live
+probes (``free_pages()`` / ``capacity_now()`` from the paged engine) and the
+router/tier models pull through the gauge, so S_F/S_D reflect the machine
+rather than static capacity constants. Percentile aggregation serves the
+evaluation figures.
 """
 from __future__ import annotations
 
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 
 class FrequencyEstimator:
@@ -42,6 +47,37 @@ class FrequencyEstimator:
         while self._times and self._times[0] < cutoff:
             self._times.popleft()
         return float(len(self._times))
+
+
+class CapacityGauge:
+    """Registry of live per-tier capacity probes.
+
+    A probe is a zero-arg callable returning "requests admittable right now"
+    (e.g. ``lambda: engine.admission_capacity(est_tokens)`` — slots bounded
+    by free KV pages for the paged engine). The router's ``Backend`` and the
+    simulator's ``TierSim`` consult the gauge when a probe is registered and
+    fall back to their static models otherwise, so Algorithm 1's S_F / S_D
+    availability checks track the actual cache state of the serving tier.
+    """
+
+    def __init__(self):
+        self._probes: Dict[str, Callable[[], int]] = {}
+
+    def register(self, name: str, probe: Callable[[], int]) -> None:
+        self._probes[name] = probe
+
+    def unregister(self, name: str) -> None:
+        self._probes.pop(name, None)
+
+    def free(self, name: str) -> Optional[int]:
+        """Live free capacity for ``name``, or None when no probe is bound."""
+        probe = self._probes.get(name)
+        if probe is None:
+            return None
+        return max(0, int(probe()))
+
+    def snapshot(self) -> Dict[str, int]:
+        return {name: max(0, int(p())) for name, p in self._probes.items()}
 
 
 def percentile(xs: Sequence[float], p: float) -> float:

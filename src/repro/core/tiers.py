@@ -15,8 +15,9 @@ Tier semantics mirror the paper's testbed (§III.A):
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Deque, List, Optional
 
 from repro.core.estimator import AppProfile, LatencyEstimator, SliceProfile, transfer_time
 from repro.core.request import Request, Tier
@@ -38,21 +39,38 @@ class TierConfig:
 
 
 class TierSim:
-    """Server-pool state used by the discrete-event simulator."""
+    """Server-pool state used by the discrete-event simulator.
 
-    def __init__(self, cfg: TierConfig, app: AppProfile, rng):
+    ``capacity_probe`` optionally binds a live capacity source (e.g. a
+    ``CapacityGauge`` probe fed by a real serving engine's ``free_pages()``)
+    so hybrid sim/real testbeds place against measured state instead of the
+    queue-model constants.
+    """
+
+    def __init__(
+        self,
+        cfg: TierConfig,
+        app: AppProfile,
+        rng,
+        capacity_probe: Optional[Callable[[], int]] = None,
+    ):
         self.cfg = cfg
         self.app = app
         self.rng = rng
         self.busy = 0
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self.warm_instances: List[float] = []   # elastic: free-at times
         self.inflight = 0
         self.served = 0
         self.busy_time = 0.0
+        self.capacity_probe = capacity_probe
 
     # -- availability (Algorithm 1's S_F / S_D) -----------------------------
     def free_slots(self) -> int:
+        if self.capacity_probe is not None:
+            live = self.capacity_probe()
+            if live is not None:      # probe gone dark -> static queue model
+                return max(0, int(live))
         if self.cfg.tier == Tier.SERVERLESS:
             return max(0, self.cfg.concurrency_limit - self.inflight)
         return max(0, self.cfg.n_workers - self.busy) + max(

@@ -1,0 +1,103 @@
+"""Paged GQA decode attention — Pallas TPU kernel (vLLM-style block tables).
+
+One new token per sequence attends over a KV cache stored as fixed-size
+pages in a shared pool; a per-sequence block table maps logical block i to a
+physical page. Grid (B, KV, n_pages): each step DMAs ONE physical page of
+K/V into VMEM — the page id comes from the scalar-prefetched block table, so
+the index map itself performs the gather and the kernel body is identical in
+shape to the dense flash-decoding kernel (online softmax over page blocks).
+
+Unused block-table entries point at the reserved null page 0, so every index
+the DMA engine sees is in-bounds; the length mask kills their scores.
+
+VMEM working set per step: G x hd (q) + 2 x ps x hd (one K and one V page)
++ G x hd f32 accumulator — independent of sequence length and pool size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, ps, n_p, scale):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = len_ref[b]                                  # scalar int32
+    t_start = ip * ps
+
+    @pl.when(t_start < valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)             # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                        # (G, ps)
+        tpos = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tpos < valid, s, NEG_INF)
+        m_prev = m_ref[...]                              # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ip == n_p - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_grouped(
+    q: jax.Array,          # (B, KV, G, hd) — one token per sequence
+    pool_k: jax.Array,     # (num_pages, KV, ps, hd) shared page pool
+    pool_v: jax.Array,
+    block_tab: jax.Array,  # (B, P) int32 physical page per logical block
+    lengths: jax.Array,    # (B,) int32 valid tokens per sequence
+    interpret: bool = True,
+) -> jax.Array:
+    B, KV, G, hd = q.shape
+    ps = pool_k.shape[2]
+    n_p = block_tab.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_kernel, ps=ps, n_p=n_p, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_p),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ip, lens, tab: (b, h, 0, 0)),
+            # the gather: block ip of sequence b lives in physical page tab[b, ip]
+            pl.BlockSpec((1, 1, ps, hd), lambda b, h, ip, lens, tab: (tab[b, ip], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd), lambda b, h, ip, lens, tab: (tab[b, ip], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ip, lens, tab: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tab, q, pool_k, pool_v)

@@ -1,0 +1,27 @@
+"""Model-facing wrapper: (B, 1, H, hd) q against a shared KV page pool."""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_grouped
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def paged_attention(q, pool_k, pool_v, block_tab, lengths, use_pallas: bool = True):
+    """q: (B, S=1, H, hd); pools: (num_pages, KV, ps, hd); block_tab: (B, P);
+    lengths: (B,) valid tokens per sequence. Returns (B, 1, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = pool_k.shape[1]
+    G = H // KV
+    qg = q[:, 0].reshape(B, KV, G, hd)
+    lens = jnp.asarray(lengths, jnp.int32)
+    tab = jnp.asarray(block_tab, jnp.int32)
+    if use_pallas:
+        o = paged_attention_grouped(qg, pool_k, pool_v, tab, lens, interpret=_INTERPRET)
+    else:
+        o = paged_attention_ref(qg, pool_k, pool_v, tab, lens)
+    return o.reshape(B, 1, H, hd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for paged GQA decode attention: gather then dense."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def gather_kv(pool: jnp.ndarray, block_tab: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the dense (B, KV, P*ps, hd) view of a paged pool.
+
+    pool: (num_pages, KV, ps, hd); block_tab: (B, P) int32.
+    """
+    B, P = block_tab.shape
+    _, KV, ps, hd = pool.shape
+    g = pool[block_tab]                       # (B, P, KV, ps, hd)
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
+
+
+def paged_attention_ref(q, pool_k, pool_v, block_tab, lengths):
+    """q: (B, KV, G, hd); pools: (num_pages, KV, ps, hd); lengths: (B,)."""
+    k = gather_kv(pool_k, block_tab)
+    v = gather_kv(pool_v, block_tab)
+    return decode_attention_ref(q, k, v, lengths)

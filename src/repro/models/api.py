@@ -19,6 +19,7 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models import attention as attn_mod
 from repro.models import transformer as tf
 from repro.models import whisper as wh
 from repro.models.common import ModelConfig, init_tree, shape_tree
@@ -59,6 +60,9 @@ class DecoderLM:
     def init_cache(self, batch: int, cap: int):
         return tf.init_cache(self.cfg, batch, cap)
 
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int):
+        return tf.init_paged_cache(self.cfg, batch, num_pages, page_size)
+
     # -- steps ---------------------------------------------------------------
     def _positions(self, batch: int, seq: int, offset=0):
         if self.cfg.pos == "mrope":
@@ -96,6 +100,19 @@ class DecoderLM:
     def decode(self, ctx, params, cache, batch: Mapping):
         tok = batch["token"]
         B, S = tok.shape
+        if "block_tab" in batch:
+            # paged path: cache is a page pool, "block_tab" (B, P) maps each
+            # slot's logical blocks to physical pages (serving/paging.py).
+            lens = jnp.asarray(batch["lengths"], jnp.int32)
+            pidx = attn_mod.PagedIndex(lens, jnp.asarray(batch["block_tab"], jnp.int32))
+            pos = lens[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+            if self.cfg.pos == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, B, S))
+            h, cache, _ = tf.forward(
+                self.cfg, ctx, params, tokens=tok, positions=pos,
+                mode="decode", cache=cache, cache_index=pidx,
+            )
+            return next_tokens(self.cfg, ctx, params, h), cache
         # "lengths" (B,) enables per-slot cache positions (continuous
         # batching); "cache_index" scalar is the aligned-batch/dry-run path.
         idx = batch.get("lengths", batch["cache_index"])

@@ -8,7 +8,7 @@ execution path; the jnp path here is the oracle and the CPU dry-run path.
 """
 from __future__ import annotations
 
-from typing import Mapping, Optional
+from typing import Mapping, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +65,80 @@ def kv_cache_defs(
 
 def init_kv_cache(cfg: ModelConfig, batch: int, cap: int, n_heads: int = 0) -> dict:
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), kv_cache_defs(cfg, batch, cap, n_heads))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (vLLM-style page pool + block tables; serving/paging.py
+# owns the host-side allocator, this is the device layout + access path)
+# ---------------------------------------------------------------------------
+
+
+class PagedIndex(NamedTuple):
+    """Decode-time cache address for the paged path.
+
+    lengths: (B,) int32 — tokens already in cache per slot (write position).
+    block_tab: (B, P) int32 — physical page per logical block; unused
+    entries point at the reserved null page 0.
+    """
+
+    lengths: jax.Array
+    block_tab: jax.Array
+
+
+def paged_kv_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int, n_heads: int = 0) -> dict:
+    """ShapeDtypeStructs for one attention layer's shared page pool."""
+    H = n_heads or cfg.n_heads
+    KV = min(cfg.n_kv_heads, H)
+    if cfg.kv_quant:
+        raise NotImplementedError("paged KV cache does not support int8 KV yet")
+    if cfg.logit_softcap:
+        # the paged decode path (kernel and ref) has no softcap; refusing at
+        # construction keeps the dense/paged token-parity contract honest
+        raise NotImplementedError("paged decode does not support logit_softcap yet")
+    shape = (num_pages, KV, page_size, cfg.hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, cfg.compute_dtype),
+        "v": jax.ShapeDtypeStruct(shape, cfg.compute_dtype),
+    }
+
+
+def paged_cache_kv(cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array, idx: PagedIndex) -> dict:
+    """Scatter one new token's K/V (B, 1, KV, hd) into the page pool at each
+    slot's (page, offset). Dead slots (length 0, null block table) scatter
+    into the reserved null page — harmless by construction."""
+    ps = cache["k"].shape[2]
+    KV = cache["k"].shape[1]
+    pages = jnp.take_along_axis(idx.block_tab, (idx.lengths // ps)[:, None], axis=1)[:, 0]
+    offs = idx.lengths % ps
+    kvh = jnp.arange(KV)
+    out = dict(cache)
+    out["k"] = cache["k"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        k[:, 0].astype(cache["k"].dtype)
+    )
+    out["v"] = cache["v"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        v[:, 0].astype(cache["v"].dtype)
+    )
+    return out
+
+
+def paged_write_prompt(cache: Mapping, k: jax.Array, v: jax.Array, tab_row: jax.Array) -> dict:
+    """Write a whole prefilled prompt (1, Lp, KV, hd) through one sequence's
+    block-table row (P,) into the pool; token t -> (tab_row[t//ps], t%ps)."""
+    ps = cache["k"].shape[2]
+    KV = cache["k"].shape[1]
+    Lp = k.shape[1]
+    t = jnp.arange(Lp)
+    pages = tab_row[t // ps]
+    offs = t % ps
+    kvh = jnp.arange(KV)
+    out = dict(cache)
+    out["k"] = cache["k"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        k[0].astype(cache["k"].dtype)
+    )
+    out["v"] = cache["v"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        v[0].astype(cache["v"].dtype)
+    )
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -298,6 +372,16 @@ def self_attention(
         assert cache is not None
         new_cache = cache_kv(cfg, cache, k, v, 0 if cache_index is None else cache_index)
         o = chunked_attention(cfg, q, k, v, pos_t, pos_t, causal=causal)
+    elif mode == "decode" and isinstance(cache_index, PagedIndex):
+        assert cache is not None and S == 1
+        new_cache = paged_cache_kv(cfg, cache, k, v, cache_index)
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        o = pa_ops.paged_attention(
+            q, new_cache["k"], new_cache["v"],
+            cache_index.block_tab, cache_index.lengths + 1,
+            use_pallas=cfg.use_pallas,
+        )
     elif mode == "decode":
         assert cache is not None and cache_index is not None
         new_cache = cache_kv(cfg, cache, k, v, cache_index)

@@ -114,6 +114,31 @@ def init_cache(cfg: ModelConfig, batch: int, cap: int, enc_len: int = 0) -> dict
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_defs(cfg, batch, cap, enc_len))
 
 
+def paged_cache_defs(cfg: ModelConfig, batch: int, num_pages: int, page_size: int) -> dict:
+    """Paged decode cache: attention layers share a per-layer page pool
+    (no per-slot max_len stripes — serving/paging.py hands out pages);
+    recurrent mixers (mamba/xlstm) keep O(1) per-slot state as before."""
+    if cfg.cross_attn:
+        raise NotImplementedError("paged cache does not support cross-attention")
+    per_sb: dict = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "attn":
+            per_sb[f"l{i}_mixer"] = attn.paged_kv_pool_defs(cfg, num_pages, page_size)
+        elif kind == "mamba":
+            per_sb[f"l{i}_mixer"] = mam.mamba_cache_defs(cfg, batch)
+        elif kind == "mlstm":
+            per_sb[f"l{i}_mixer"] = xl.mlstm_cache_defs(cfg, batch)
+        elif kind == "slstm":
+            per_sb[f"l{i}_mixer"] = xl.slstm_cache_defs(cfg, batch)
+    return {"blocks": _stack_shape(per_sb, cfg.n_superblocks)}
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int, page_size: int) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), paged_cache_defs(cfg, batch, num_pages, page_size)
+    )
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

@@ -1,10 +1,17 @@
-"""Batched inference engine: prefill + decode with continuous batching.
+"""Batched inference engines: prefill + decode with continuous batching.
 
-One engine instance backs one tier slice. Slots hold independent sequences;
-``step()`` admits waiting prompts into free slots (prefill, one at a time)
-and advances all active slots together (batched decode) — standard
-continuous batching (Orca/vLLM style) on a fixed slot count with a shared
-max_len cache.
+Two engines back the serving tiers:
+
+* ``InferenceEngine`` (v1, dense): slots hold independent sequences over a
+  fixed ``max_slots x max_len`` cache — every admitted sequence reserves a
+  full ``max_len`` stripe up front (Orca-style continuous batching).
+
+* ``PagedInferenceEngine`` (v2, paged): the KV cache is a shared pool of
+  fixed-size pages (serving/paging.py); sequences own page lists, admission
+  is gated on *free pages* rather than free slots, and page exhaustion
+  preempts the newest sequence back to the waiting queue (recompute-style
+  resume, vLLM-like). The engine exports ``free_pages()`` /
+  ``capacity_now()`` so the StraightLine placer sees live capacity.
 
 The jitted functions are built once per engine from the same step builders
 the dry-run lowers, so what serves here is what was dry-run there.
@@ -12,14 +19,17 @@ the dry-run lowers, so what serves here is what was dry-run there.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import attention as attn_mod
 from repro.models import get_model
+from repro.serving.paging import NULL_PAGE, BlockAllocator, OutOfPages, PageTable
 
 
 @dataclass
@@ -36,21 +46,63 @@ class Sequence:
     prompt: List[int]
     out: List[int] = field(default_factory=list)
     done: bool = False
+    preemptions: int = 0
+
+    def context_tokens(self) -> List[int]:
+        """Tokens that must be in cache to resume decoding (recompute)."""
+        return list(self.prompt) + list(self.out)
 
 
-class InferenceEngine:
+class _EngineBase:
+    """Shared continuous-batching scaffolding: submission bookkeeping, the
+    stop conditions (applied identically at admission and after decode so
+    the dense/paged engines stay token-for-token interchangeable), and the
+    synchronous generate loop. Subclasses provide ``step()`` and set
+    ``_max_new`` / ``_eos`` / ``_len_cap``."""
+
+    def free_slots(self) -> int:
+        return sum(1 for s in self.slot_seq if s is None)
+
+    def submit(self, prompt: List[int]) -> int:
+        seq = Sequence(self._sid, list(prompt))
+        self._sid += 1
+        self.waiting.append(seq)
+        return seq.sid
+
+    def _stop_hit(self, seq: Sequence, tok: int, cache_len: int) -> bool:
+        return (
+            len(seq.out) >= self._max_new
+            or tok == self._eos
+            or cache_len >= self._len_cap - 1
+        )
+
+    def generate(self, prompts: List[List[int]], max_steps: int = 10000) -> List[Sequence]:
+        """Synchronous convenience: run until all prompts finish."""
+        done: List[Sequence] = []
+        for p in prompts:
+            self.submit(p)
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.waiting and all(s is None for s in self.slot_seq):
+                break
+        return sorted(done, key=lambda s: s.sid)
+
+
+class InferenceEngine(_EngineBase):
     def __init__(self, cfg, ecfg: EngineConfig, ctx=None, params=None, seed: int = 0):
         self.cfg = cfg
         self.ecfg = ecfg
         self.ctx = ctx
         self.model = get_model(cfg)
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
+        self._max_new, self._eos, self._len_cap = ecfg.max_new_tokens, ecfg.eos_id, ecfg.max_len
         B, L = ecfg.max_slots, ecfg.max_len
         self.cache = self.model.init_cache(B, L)
         self.slot_len = np.zeros(B, np.int32)        # tokens in cache per slot
         self.slot_seq: List[Optional[Sequence]] = [None] * B
-        self.waiting: List[Sequence] = []
+        self.waiting: Deque[Sequence] = deque()
         self._sid = 0
+        self._just_finished: List[Sequence] = []
         self._build()
 
     # -- jitted steps ---------------------------------------------------------
@@ -82,17 +134,28 @@ class InferenceEngine:
         self._decode = jax.jit(decode_all, donate_argnums=(1,))
         self._last = np.zeros(B, np.int32)
 
-    # -- public API -------------------------------------------------------------
-    def submit(self, prompt: List[int]) -> int:
-        seq = Sequence(self._sid, list(prompt))
-        self._sid += 1
-        self.waiting.append(seq)
-        return seq.sid
+    # -- capacity telemetry ------------------------------------------------------
+    def capacity_now(self) -> Dict[str, int]:
+        """Live capacity snapshot for the placer (core/telemetry.py gauge).
+        The dense engine reserves max_len cache tokens per admitted slot."""
+        free = self.free_slots()
+        return {
+            "free_slots": free,
+            "num_slots": self.ecfg.max_slots,
+            "free_cache_tokens": free * self.ecfg.max_len,
+            "cache_tokens": self.ecfg.max_slots * self.ecfg.max_len,
+            "waiting": len(self.waiting),
+        }
 
+    def admission_capacity(self, est_tokens: int = 0) -> int:
+        """How many more requests this engine can admit right now."""
+        return self.free_slots()
+
+    # -- public API -------------------------------------------------------------
     def _admit(self) -> None:
         for i in range(self.ecfg.max_slots):
             if self.slot_seq[i] is None and self.waiting:
-                seq = self.waiting.pop(0)
+                seq = self.waiting.popleft()
                 toks = jnp.asarray(seq.prompt, jnp.int32)
                 nxt, self.cache = self._prefill(
                     self.params, self.cache, toks, jnp.asarray(i), jnp.asarray(len(seq.prompt))
@@ -101,12 +164,19 @@ class InferenceEngine:
                 self.slot_len[i] = len(seq.prompt)
                 self._last[i] = int(nxt)
                 seq.out.append(int(nxt))
+                if self._stop_hit(seq, int(nxt), int(self.slot_len[i])):
+                    # the prefill-emitted token can already cross a stop
+                    # condition (max_new_tokens=1, or greedy EOS on prompt)
+                    seq.done = True
+                    self._just_finished.append(seq)
+                    self.slot_seq[i] = None
+                    self.slot_len[i] = 0
 
     def step(self) -> List[Sequence]:
         """Admit + one decode step; returns sequences finished this step."""
         self._admit()
+        finished, self._just_finished = self._just_finished, []
         active = [i for i in range(self.ecfg.max_slots) if self.slot_seq[i] is not None]
-        finished: List[Sequence] = []
         if active:
             lens = jnp.asarray(self.slot_len)
             nxt, self.cache = self._decode(
@@ -118,24 +188,328 @@ class InferenceEngine:
                 self.slot_len[i] += 1
                 self._last[i] = nxt[i]
                 seq.out.append(int(nxt[i]))
-                if (
-                    len(seq.out) >= self.ecfg.max_new_tokens
-                    or int(nxt[i]) == self.ecfg.eos_id
-                    or self.slot_len[i] >= self.ecfg.max_len - 1
-                ):
+                if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
                     seq.done = True
                     finished.append(seq)
                     self.slot_seq[i] = None
                     self.slot_len[i] = 0
         return finished
 
-    def generate(self, prompts: List[List[int]], max_steps: int = 10000) -> List[Sequence]:
-        """Synchronous convenience: run until all prompts finish."""
-        done: List[Sequence] = []
-        for p in prompts:
-            self.submit(p)
-        for _ in range(max_steps):
-            done.extend(self.step())
-            if not self.waiting and all(s is None for s in self.slot_seq):
+
+# ---------------------------------------------------------------------------
+# Paged engine (v2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PagedEngineConfig:
+    page_size: int = 16
+    num_pages: int = 64          # pool size, incl. the reserved null page 0
+    max_slots: int = 8           # decode batch width
+    max_seq_len: int = 256       # block-table width = ceil(max_seq_len / page_size)
+    max_new_tokens: int = 32
+    eos_id: int = -1
+
+    @property
+    def table_width(self) -> int:
+        return -(-self.max_seq_len // self.page_size)
+
+    @property
+    def cache_tokens(self) -> int:
+        """Usable cache budget in tokens (null page excluded)."""
+        return (self.num_pages - 1) * self.page_size
+
+
+class PagedInferenceEngine(_EngineBase):
+    """Continuous batching over a paged KV cache.
+
+    Differences from the dense engine:
+      * a sequence holds ceil(len/page_size) pages, not a max_len stripe —
+        short sequences leave the rest of the pool for others;
+      * admission is gated on the free list (pages for prompt + 1 token);
+      * when a growing sequence needs a page and the pool is dry, the newest
+        admitted sequence is preempted back to the waiting queue; on
+        re-admission its full context (prompt + generated tokens) is
+        re-prefilled, which under greedy decoding reproduces the identical
+        continuation;
+      * ``fork()`` clones a running sequence sharing its full prefix pages
+        (ref-counted) — only the trailing partial page is copied.
+    """
+
+    def __init__(self, cfg, pcfg: PagedEngineConfig, ctx=None, params=None, seed: int = 0):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.ctx = ctx
+        if pcfg.num_pages - 1 < pcfg.table_width:
+            # one max-length sequence must always fit, else admission can
+            # stall forever and the sole active sequence can never grow
+            raise ValueError(
+                f"num_pages={pcfg.num_pages} cannot hold one max_seq_len={pcfg.max_seq_len} "
+                f"sequence ({pcfg.table_width} pages + reserved null page)"
+            )
+        self.model = get_model(cfg)
+        self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
+        self._max_new, self._eos, self._len_cap = pcfg.max_new_tokens, pcfg.eos_id, pcfg.max_seq_len
+        B, P = pcfg.max_slots, pcfg.table_width
+        self.cache = self.model.init_paged_cache(B, pcfg.num_pages, pcfg.page_size)
+        self.allocator = BlockAllocator(pcfg.num_pages, pcfg.page_size)
+        self.tables: List[Optional[PageTable]] = [None] * B
+        self.slot_len = np.zeros(B, np.int32)
+        self.slot_seq: List[Optional[Sequence]] = [None] * B
+        self.block_tab = np.full((B, P), NULL_PAGE, np.int32)
+        self.waiting: Deque[Sequence] = deque()
+        self.preemptions = 0
+        self.peak_active = 0
+        self._sid = 0
+        self._stamp = np.zeros(B, np.int64)   # admission order, newest = max
+        self._stamp_next = 1
+        self._just_finished: List[Sequence] = []
+        self._build()
+
+    # -- jitted steps ---------------------------------------------------------
+    def _build(self):
+        model, ctx, cfg = self.model, self.ctx, self.cfg
+
+        def prefill_paged(params, cache, tokens, tab_row, slot):
+            """Prefill one sequence and scatter its K/V through the block
+            table into the page pools; per-slot (SSM) state writes densely."""
+            tok2 = tokens[None, :]                                    # (1, Lp)
+            next_tok, mini = model.prefill(ctx, params, {"tokens": tok2}, cap=tokens.shape[0])
+            out_blocks = dict(cache["blocks"])
+            for i, kind in enumerate(cfg.block_pattern):
+                key = f"l{i}_mixer"
+                if kind == "attn":
+                    pool = cache["blocks"][key]
+                    m = mini["blocks"][key]
+                    out_blocks[key] = jax.vmap(
+                        lambda pk, pv, km, vm: attn_mod.paged_write_prompt(
+                            {"k": pk, "v": pv}, km, vm, tab_row
+                        )
+                    )(pool["k"], pool["v"], m["k"], m["v"])
+                else:
+                    out_blocks[key] = jax.tree.map(
+                        lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                            full, part.astype(full.dtype), slot, axis=1
+                        ),
+                        cache["blocks"][key],
+                        mini["blocks"][key],
+                    )
+            return next_tok[0], {"blocks": out_blocks}
+
+        def decode_all(params, cache, last_tokens, lens, tab):
+            batch = {"token": last_tokens[:, None], "lengths": lens, "block_tab": tab}
+            return model.decode(ctx, params, cache, batch)
+
+        def copy_fork(cache, src_pages, dst_pages, src_slot, dst_slot):
+            """Device-side copy-on-write for fork(): duplicate the trailing
+            partial pages and the per-slot recurrent state."""
+            out_blocks = dict(cache["blocks"])
+            for i, kind in enumerate(cfg.block_pattern):
+                key = f"l{i}_mixer"
+                if kind == "attn":
+                    out_blocks[key] = jax.tree.map(
+                        lambda pool: pool.at[:, dst_pages].set(pool[:, src_pages]),
+                        cache["blocks"][key],
+                    )
+                else:
+                    def copy_slot(leaf):
+                        row = jax.lax.dynamic_slice_in_dim(leaf, src_slot, 1, axis=1)
+                        return jax.lax.dynamic_update_slice_in_dim(leaf, row, dst_slot, axis=1)
+
+                    out_blocks[key] = jax.tree.map(copy_slot, cache["blocks"][key])
+            return {"blocks": out_blocks}
+
+        self._prefill = jax.jit(prefill_paged)
+        self._decode = jax.jit(decode_all, donate_argnums=(1,))
+        self._copy_fork = jax.jit(copy_fork, donate_argnums=(0,))
+        self._last = np.zeros(self.pcfg.max_slots, np.int32)
+
+    # -- capacity telemetry ------------------------------------------------------
+    def free_pages(self) -> int:
+        return self.allocator.free_pages
+
+    def capacity_now(self) -> Dict[str, int]:
+        """Live capacity snapshot: what the StraightLine placer consumes
+        instead of a static ``capacity`` constant."""
+        return {
+            "free_slots": self.free_slots(),
+            "num_slots": self.pcfg.max_slots,
+            "free_pages": self.allocator.free_pages,
+            "num_pages": self.pcfg.num_pages - 1,
+            "free_cache_tokens": self.allocator.free_pages * self.pcfg.page_size,
+            "cache_tokens": self.pcfg.cache_tokens,
+            "waiting": len(self.waiting),
+        }
+
+    def admission_capacity(self, est_tokens: int = 0) -> int:
+        """How many requests of ~est_tokens context the engine can admit now
+        (page- and slot-bounded). est_tokens=0 assumes a one-page sequence."""
+        est = max(1, est_tokens)
+        per_seq = PageTable.pages_needed(est + 1, self.pcfg.page_size)
+        return min(self.free_slots(), self.allocator.free_pages // per_seq)
+
+    # -- public API -------------------------------------------------------------
+    def submit(self, prompt: List[int]) -> int:
+        if len(prompt) + self.pcfg.max_new_tokens > self.pcfg.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens exceeds max_seq_len={self.pcfg.max_seq_len}"
+            )
+        return super().submit(prompt)
+
+    def _free_slot(self) -> Optional[int]:
+        for i in range(self.pcfg.max_slots):
+            if self.slot_seq[i] is None:
+                return i
+        return None
+
+    def _install(self, slot: int, seq: Sequence, table: PageTable) -> int:
+        """Prefill seq's full context through ``table`` into slot; returns
+        the emitted next token."""
+        ctx_toks = seq.context_tokens()
+        table.num_tokens = len(ctx_toks)
+        self.tables[slot] = table
+        self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+        nxt, self.cache = self._prefill(
+            self.params,
+            self.cache,
+            jnp.asarray(ctx_toks, jnp.int32),
+            jnp.asarray(self.block_tab[slot]),
+            jnp.asarray(slot),
+        )
+        self.slot_seq[slot] = seq
+        self.slot_len[slot] = len(ctx_toks)
+        self._last[slot] = int(nxt)
+        self._stamp[slot] = self._stamp_next
+        self._stamp_next += 1
+        return int(nxt)
+
+    def _release(self, slot: int) -> None:
+        self.tables[slot].release(self.allocator)
+        self.tables[slot] = None
+        self.slot_seq[slot] = None
+        self.slot_len[slot] = 0
+        self.block_tab[slot, :] = NULL_PAGE
+        self._stamp[slot] = 0
+
+    def _admit(self) -> None:
+        while self.waiting:
+            slot = self._free_slot()
+            if slot is None:
                 break
-        return sorted(done, key=lambda s: s.sid)
+            seq = self.waiting[0]
+            ctx_len = len(seq.context_tokens())
+            need = PageTable.pages_needed(ctx_len + 1, self.pcfg.page_size)
+            if not self.allocator.can_alloc(need):
+                break                                    # page-gated admission
+            self.waiting.popleft()
+            table = PageTable(self.pcfg.page_size, self.allocator.alloc(need))
+            nxt = self._install(slot, seq, table)
+            seq.out.append(nxt)
+            if self._stop_hit(seq, nxt, int(self.slot_len[slot])):
+                # the (re-)prefill-emitted token can already cross a stop
+                # condition: a resumed sequence near max_new_tokens, or a
+                # fresh prompt whose greedy next token is EOS
+                seq.done = True
+                self._just_finished.append(seq)
+                self._release(slot)
+
+    def _preempt_newest(self, active: List[int]) -> int:
+        """Evict the most recently admitted active sequence back to the
+        waiting queue (front), releasing its pages. Returns the slot."""
+        victim = max(active, key=lambda i: self._stamp[i])
+        seq = self.slot_seq[victim]
+        seq.preemptions += 1
+        self.preemptions += 1
+        self.waiting.appendleft(seq)
+        self._release(victim)
+        active.remove(victim)
+        return victim
+
+    def _ensure_growth(self, active: List[int]) -> None:
+        """Every active slot writes one token at position slot_len this step;
+        allocate the page that position lands in, preempting the newest
+        sequence when the pool is dry."""
+        for slot in sorted(active, key=lambda i: self._stamp[i]):
+            if slot not in active:
+                continue
+            while self.tables[slot].capacity_tokens <= self.slot_len[slot]:
+                try:
+                    self.tables[slot].append_pages(self.allocator.alloc(1))
+                    self.block_tab[slot, :] = self.tables[slot].row(self.pcfg.table_width)
+                except OutOfPages:
+                    if active == [slot]:
+                        raise RuntimeError(
+                            "page pool too small to grow the only active sequence; "
+                            "increase num_pages"
+                        )
+                    preempted = self._preempt_newest(active)
+                    if preempted == slot:
+                        break
+
+    def step(self) -> List[Sequence]:
+        """Grow + admit + one decode step; returns sequences finished.
+        Growth runs first so admission can't grab the last pages only for
+        the freshly prefilled sequence to be preempted in the same step —
+        admitted sequences are already growth-covered (ceil((ctx+1)/ps))."""
+        self._ensure_growth(
+            [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
+        )
+        self._admit()
+        finished, self._just_finished = self._just_finished, []
+        active = [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
+        self.peak_active = max(self.peak_active, len(active))
+        if active:
+            nxt, self.cache = self._decode(
+                self.params,
+                self.cache,
+                jnp.asarray(self._last),
+                jnp.asarray(self.slot_len),
+                jnp.asarray(self.block_tab),
+            )
+            nxt = np.asarray(nxt)
+            for i in active:
+                seq = self.slot_seq[i]
+                self.slot_len[i] += 1
+                self.tables[i].num_tokens = int(self.slot_len[i])
+                self._last[i] = nxt[i]
+                seq.out.append(int(nxt[i]))
+                if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
+                    seq.done = True
+                    finished.append(seq)
+                    self._release(i)
+        return finished
+
+    def fork(self, sid: int) -> Optional[int]:
+        """Clone a running sequence (hedged/retried copy): full prefix pages
+        are shared via ref-counting, the trailing partial page is copied on
+        device, and the clone continues decoding independently. Returns the
+        new sid, or None if no free slot / pages."""
+        src = next((i for i, s in enumerate(self.slot_seq) if s is not None and s.sid == sid), None)
+        dst = self._free_slot()
+        if src is None or dst is None:
+            return None
+        try:
+            new_table = self.tables[src].fork(self.allocator)
+        except OutOfPages:
+            return None
+        seq = self.slot_seq[src]
+        clone = Sequence(self._sid, list(seq.prompt), out=list(seq.out))
+        self._sid += 1
+        n_full = new_table.num_tokens // self.pcfg.page_size
+        src_part = self.tables[src].pages[n_full:]
+        dst_part = new_table.pages[n_full:]
+        self.cache = self._copy_fork(
+            self.cache,
+            jnp.asarray(src_part or [NULL_PAGE], jnp.int32),
+            jnp.asarray(dst_part or [NULL_PAGE], jnp.int32),
+            jnp.asarray(src),
+            jnp.asarray(dst),
+        )
+        self.tables[dst] = new_table
+        self.block_tab[dst, :] = new_table.row(self.pcfg.table_width)
+        self.slot_seq[dst] = clone
+        self.slot_len[dst] = self.slot_len[src]
+        self._last[dst] = self._last[src]
+        self._stamp[dst] = self._stamp_next
+        self._stamp_next += 1
+        return clone.sid

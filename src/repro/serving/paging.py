@@ -1,0 +1,168 @@
+"""Paged KV-cache bookkeeping: BlockAllocator + per-sequence PageTable.
+
+Page-table layout
+-----------------
+The device-side KV cache is a *pool* of fixed-size pages, one pool per
+attention layer (stacked over superblocks, so each pool leaf is
+``(n_sb, num_pages, KV, page_size, hd)``).  A sequence does not own a
+contiguous ``max_len`` stripe of the cache; instead it owns an ordered list
+of physical page ids — its *page table* — and logical token position ``t``
+lives at ``(page_table[t // page_size], t % page_size)``.
+
+  physical pool (per layer)          page tables (host, this module)
+  ┌────┬────┬────┬────┬────┐         seq A: [3, 1]      (len 21, ps=16)
+  │ p0 │ p1 │ p2 │ p3 │ p4 │  ...    seq B: [4]         (len  7)
+  └────┴────┴────┴────┴────┘         free list: [2, ...]
+
+Page 0 is reserved as the *null page*: it is never handed out, block-table
+rows are padded with 0, and dead decode slots scatter their garbage writes
+into it — so every index the kernels see is a valid physical page.
+
+The allocator is pure host-side bookkeeping (device tensors never move when
+pages change hands). Ref-counting lets hedged / retried copies of a request
+share their common prefix pages: ``fork()`` bumps the ref-count of every
+full page and only the last, partially-filled page must be copied
+(copy-on-write, performed by the engine on device). ``free()`` decrements
+and returns a page to the free list only when its count reaches zero.
+
+All structures are deterministic (freed pages return to a FIFO free list)
+so preemption/resume tests can assert exact page reuse.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List
+
+NULL_PAGE = 0
+
+
+class OutOfPages(Exception):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class BlockAllocator:
+    """Fixed-size page allocator with ref-counting over ``num_pages`` pages.
+
+    Page 0 (``NULL_PAGE``) is reserved and never allocated.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: Deque[int] = deque(range(1, num_pages))
+        self._refs: Dict[int, int] = {}
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._refs)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc / free / share ---------------------------------------------
+    def alloc(self, n: int = 1) -> List[int]:
+        """Hand out ``n`` pages (ref-count 1 each) or raise OutOfPages —
+        all-or-nothing, so a failed admission never leaks pages."""
+        if not self.can_alloc(n):
+            raise OutOfPages(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def share(self, page: int) -> int:
+        """Bump the ref-count of an allocated page (prefix sharing)."""
+        if page not in self._refs:
+            raise ValueError(f"page {page} is not allocated")
+        self._refs[page] += 1
+        return self._refs[page]
+
+    def ref_count(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; pages return to the free list only
+        when the last reference dies."""
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"double free of page {p}")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+    def check_invariants(self) -> None:
+        """free + used = num_pages - 1 (null page); no page in both sets."""
+        free = set(self._free)
+        used = set(self._refs)
+        assert NULL_PAGE not in free and NULL_PAGE not in used
+        assert not (free & used), free & used
+        assert len(free) + len(used) == self.num_pages - 1
+        assert all(c > 0 for c in self._refs.values())
+
+
+@dataclass
+class PageTable:
+    """Ordered physical pages backing one sequence's logical token stream."""
+
+    page_size: int
+    pages: List[int] = field(default_factory=list)
+    num_tokens: int = 0
+
+    @property
+    def capacity_tokens(self) -> int:
+        return len(self.pages) * self.page_size
+
+    def page_of(self, t: int) -> int:
+        return self.pages[t // self.page_size]
+
+    def offset_of(self, t: int) -> int:
+        return t % self.page_size
+
+    @staticmethod
+    def pages_needed(tokens: int, page_size: int) -> int:
+        return -(-tokens // page_size)  # ceil div
+
+    def append_pages(self, pages: List[int]) -> None:
+        self.pages.extend(pages)
+
+    def row(self, width: int) -> List[int]:
+        """Block-table row padded with the null page to ``width`` entries."""
+        if len(self.pages) > width:
+            raise ValueError(f"sequence needs {len(self.pages)} pages, table width {width}")
+        return self.pages + [NULL_PAGE] * (width - len(self.pages))
+
+    def fork(self, allocator: BlockAllocator) -> "PageTable":
+        """Share this table's pages with a new sequence (hedged/retried
+        copy). Full pages are shared (ref-count++); the trailing partial
+        page — which the original will keep appending into — is re-allocated
+        fresh for the fork, and the engine must copy its contents on device
+        (copy-on-write). Raises OutOfPages if the CoW page can't be had."""
+        n_full = self.num_tokens // self.page_size
+        shared = self.pages[:n_full]
+        for p in shared:
+            allocator.share(p)
+        new_pages = list(shared)
+        if n_full < len(self.pages):  # trailing partial page -> CoW
+            try:
+                new_pages.extend(allocator.alloc(len(self.pages) - n_full))
+            except OutOfPages:
+                for p in shared:
+                    allocator.free([p])
+                raise
+        return PageTable(self.page_size, new_pages, self.num_tokens)
+
+    def release(self, allocator: BlockAllocator) -> None:
+        allocator.free(self.pages)
+        self.pages = []
+        self.num_tokens = 0

@@ -1,0 +1,341 @@
+"""Paged KV-cache subsystem: allocator invariants, kernel parity, engine v2
+preemption/resume/fork, and live-capacity placement feedback."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import CapacityGauge, Request, StraightLinePolicy, Thresholds, Tier
+from repro.core.router import Backend, StraightLineRouter
+from repro.serving.engine import (
+    EngineConfig,
+    InferenceEngine,
+    PagedEngineConfig,
+    PagedInferenceEngine,
+)
+from repro.serving.paging import NULL_PAGE, BlockAllocator, OutOfPages, PageTable
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator / PageTable
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_invariants():
+    a = BlockAllocator(num_pages=8, page_size=4)
+    assert a.free_pages == 7                      # page 0 reserved
+    p1 = a.alloc(3)
+    assert len(set(p1)) == 3 and NULL_PAGE not in p1
+    p2 = a.alloc(4)
+    assert not (set(p1) & set(p2))                # never hand out a page twice
+    assert a.free_pages == 0
+    assert not a.can_alloc(1)
+    with pytest.raises(OutOfPages):
+        a.alloc(1)
+    a.free(p1)
+    assert a.free_pages == 3
+    a.check_invariants()
+    with pytest.raises(ValueError):
+        a.free([p1[0]])                           # double free detected
+
+
+def test_allocator_all_or_nothing():
+    a = BlockAllocator(num_pages=4, page_size=4)
+    with pytest.raises(OutOfPages):
+        a.alloc(5)
+    assert a.free_pages == 3                      # failed alloc leaks nothing
+    a.check_invariants()
+
+
+def test_allocator_refcounts_shared_pages():
+    a = BlockAllocator(num_pages=6, page_size=4)
+    pages = a.alloc(2)
+    assert a.ref_count(pages[0]) == 1
+    a.share(pages[0])
+    assert a.ref_count(pages[0]) == 2
+    a.free([pages[0]])                            # one owner drops
+    assert a.ref_count(pages[0]) == 1
+    assert pages[0] not in list(a._free)          # still held by the other
+    a.free([pages[0], pages[1]])
+    assert a.free_pages == 5
+    a.check_invariants()
+
+
+def test_page_table_fork_shares_full_pages_and_cows_partial():
+    a = BlockAllocator(num_pages=10, page_size=4)
+    t = PageTable(4, a.alloc(3), num_tokens=9)    # 2 full pages + 1 partial
+    f = t.fork(a)
+    assert f.pages[:2] == t.pages[:2]             # full prefix shared
+    assert f.pages[2] != t.pages[2]               # partial page copied-on-write
+    assert a.ref_count(t.pages[0]) == 2 and a.ref_count(t.pages[2]) == 1
+    t.release(a)
+    assert a.ref_count(f.pages[0]) == 1           # fork still holds the prefix
+    f.release(a)
+    a.check_invariants()
+    assert a.used_pages == 0
+
+
+def test_page_table_row_pads_with_null_page():
+    t = PageTable(4, [3, 5], num_tokens=6)
+    assert t.row(4) == [3, 5, NULL_PAGE, NULL_PAGE]
+    with pytest.raises(ValueError):
+        t.row(1)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention kernel vs pure-jnp reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lens", [[1, 5, 17, 32], [8, 8, 8, 8], [31, 2, 16, 1]])
+def test_paged_attention_kernel_matches_ref(lens):
+    from repro.kernels.paged_attention.kernel import paged_attention_grouped
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    rng = np.random.default_rng(0)
+    B, KV, G, hd, ps, P, NP = 4, 2, 3, 16, 8, 4, 20
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(NP, KV, ps, hd)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(NP, KV, ps, hd)), jnp.float32)
+    # distinct physical pages per sequence, padded with the null page
+    perm = rng.permutation(np.arange(1, NP))[: B * P].reshape(B, P)
+    tab = np.where(
+        np.arange(P)[None, :] < -(-np.asarray(lens) // ps)[:, None], perm, NULL_PAGE
+    )
+    o_kernel = paged_attention_grouped(
+        q, pk, pv, jnp.asarray(tab, jnp.int32), jnp.asarray(lens, jnp.int32), interpret=True
+    )
+    o_ref = paged_attention_ref(q, pk, pv, jnp.asarray(tab, jnp.int32), jnp.asarray(lens, jnp.int32))
+    assert jnp.allclose(o_kernel, o_ref, atol=1e-5), float(jnp.max(jnp.abs(o_kernel - o_ref)))
+
+
+# ---------------------------------------------------------------------------
+# Paged engine v2
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[1, 2, 3, 4], [5, 6, 7], [9, 10, 11, 12, 13]]
+
+
+def _smoke(arch):
+    cfg = get_config(arch, smoke=True).replace(attn_chunk=64)
+    if cfg.moe is not None:
+        # ample expert capacity => exact greedy (same trick as test_engine)
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "jamba-1.5-large-398b"])
+def test_paged_engine_matches_dense_engine(arch):
+    """Paged continuous batching must be a pure memory-layout change: same
+    greedy tokens as the dense v1 engine (attn layers paged; recurrent
+    mixers keep per-slot state)."""
+    cfg = _smoke(arch)
+    dense = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=64, max_new_tokens=4))
+    d = dense.generate(PROMPTS)
+    paged = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=8, num_pages=17, max_slots=4, max_seq_len=64, max_new_tokens=4),
+        params=dense.params,
+    )
+    p = paged.generate(PROMPTS)
+    assert [s.out for s in d] == [s.out for s in p]
+    paged.allocator.check_invariants()
+    assert paged.allocator.used_pages == 0        # every page returned
+
+
+def test_paged_engine_admission_gated_on_pages_not_slots():
+    cfg = _smoke("smollm-360m")
+    eng = PagedInferenceEngine(
+        cfg,
+        # 3 usable pages of 4 tokens; 8 slots — pages are the binding constraint
+        PagedEngineConfig(page_size=4, num_pages=4, max_slots=8, max_seq_len=8, max_new_tokens=2),
+    )
+    for p in ([1, 2, 3, 4], [4, 5, 6, 7], [7, 8, 9, 1]):
+        eng.submit(p)                             # each needs ceil(5/4) = 2 pages
+    eng._admit()
+    active = sum(1 for s in eng.slot_seq if s is not None)
+    assert active == 1                            # only 1 more page after the first
+    assert len(eng.waiting) == 2                  # rest held back by the free list
+    assert eng.free_slots() == 7                  # slots were never the limit
+
+
+def test_preemption_and_resume_identical_tokens():
+    """Page exhaustion preempts the newest sequence; recompute-resume must
+    reproduce the exact unpreempted continuation (greedy determinism)."""
+    cfg = _smoke("smollm-360m")
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12], [2, 4, 6, 1]]
+    ample = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=4, num_pages=33, max_slots=4, max_seq_len=32, max_new_tokens=8),
+    )
+    a = ample.generate(prompts)
+    assert ample.preemptions == 0
+    # 9 usable pages: all 4 admit with 2 pages, growth to a 3rd page starves
+    tight = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=4, num_pages=10, max_slots=4, max_seq_len=32, max_new_tokens=8),
+        params=ample.params,
+    )
+    t = tight.generate(prompts)
+    assert tight.preemptions > 0
+    assert [s.out for s in a] == [s.out for s in t]
+    tight.allocator.check_invariants()
+    assert tight.allocator.used_pages == 0
+
+
+def test_fork_shares_prefix_pages_and_clones_continuation():
+    cfg = _smoke("smollm-360m")
+    eng = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=4, num_pages=20, max_slots=4, max_seq_len=32, max_new_tokens=8),
+    )
+    sid = eng.submit([1, 2, 3, 4, 5, 6])
+    eng.step()
+    eng.step()                                    # a few tokens in, mid-page
+    src_slot = next(i for i, s in enumerate(eng.slot_seq) if s is not None)
+    shared = eng.tables[src_slot].pages[0]
+    csid = eng.fork(sid)
+    assert csid is not None
+    assert eng.allocator.ref_count(shared) == 2   # prefix page shared, not copied
+    done = {}
+    for _ in range(40):
+        for s in eng.step():
+            done[s.sid] = s.out
+        if len(done) == 2:
+            break
+    assert done[sid] == done[csid]                # greedy clones stay identical
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+
+
+def test_stop_conditions_apply_to_prefill_emitted_token():
+    """max_new_tokens=1 must yield exactly one token, delivered by the same
+    step() that admitted the sequence — in both engines."""
+    cfg = _smoke("smollm-360m")
+    dense = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=32, max_new_tokens=1))
+    paged = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=8, num_pages=9, max_slots=2, max_seq_len=32, max_new_tokens=1),
+        params=dense.params,
+    )
+    for eng in (dense, paged):
+        eng.submit([1, 2, 3])
+        out = eng.step()                          # admission alone finishes it
+        assert len(out) == 1 and len(out[0].out) == 1 and out[0].done
+    # greedy EOS emitted straight from prefill also stops immediately
+    probe = InferenceEngine(
+        cfg, EngineConfig(max_slots=1, max_len=32, max_new_tokens=8), params=dense.params
+    ).generate([[1, 2, 3]])[0]
+    eos = probe.out[0]
+    eng2 = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=8, num_pages=9, max_slots=1, max_seq_len=32,
+                          max_new_tokens=8, eos_id=eos),
+        params=dense.params,
+    )
+    s = eng2.generate([[1, 2, 3]])[0]
+    assert s.out == [eos]
+    eng2.allocator.check_invariants()
+    assert eng2.allocator.used_pages == 0
+
+
+def test_engine_capacity_telemetry_moves_with_load():
+    cfg = _smoke("smollm-360m")
+    eng = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=4, num_pages=9, max_slots=4, max_seq_len=16, max_new_tokens=8),
+    )
+    before = eng.capacity_now()
+    assert before["free_pages"] == 8
+    eng.submit([1, 2, 3, 4, 5])
+    eng.step()
+    during = eng.capacity_now()
+    assert during["free_pages"] < before["free_pages"]
+    assert during["free_slots"] == 3
+    assert eng.admission_capacity(est_tokens=5) < before["free_pages"]
+
+
+# ---------------------------------------------------------------------------
+# Live capacity feedback into Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def _router(flask_fn=None, docker_fn=None):
+    mk = lambda t, cap, fn: Backend(t, run=lambda req: "ok", capacity=cap, capacity_fn=fn)
+    return StraightLineRouter(
+        {
+            Tier.FLASK: mk(Tier.FLASK, 1, flask_fn),
+            Tier.DOCKER: mk(Tier.DOCKER, 4, docker_fn),
+            Tier.SERVERLESS: mk(Tier.SERVERLESS, 16, None),
+        },
+        policy=StraightLinePolicy(Thresholds(F=1e9, D=1e6)),
+    )
+
+
+def test_router_free_counts_only_capacity_not_queue_headroom():
+    r = _router()
+    b = r.backends[Tier.FLASK]
+    assert r._free(Tier.FLASK) == 1
+    b.inflight = 1
+    assert r._free(Tier.FLASK) == 0               # busy tier is NOT available
+    assert b.queue_cap > 0                        # ...even with queue headroom
+
+
+def test_router_falls_back_to_static_capacity_when_probe_goes_dark():
+    gauge = CapacityGauge()                       # nothing registered
+    r = _router(flask_fn=lambda: gauge.free("flask"))
+    assert r._free(Tier.FLASK) == 1               # None probe -> static capacity
+
+
+def test_router_placement_follows_live_capacity_probe():
+    gauge = CapacityGauge()
+    free = {"flask": 1}
+    gauge.register("flask", lambda: free["flask"])
+    r = _router(flask_fn=lambda: gauge.free("flask"))
+    t1 = r.submit(Request(rid=0, arrival_t=0.0, data_size=100.0))
+    assert t1 == Tier.FLASK
+    free["flask"] = 0                             # engine page pool exhausted
+    t2 = r.submit(Request(rid=1, arrival_t=0.0, data_size=100.0))
+    assert t2 == Tier.DOCKER                      # S_F empty -> fall through
+
+
+def test_drain_runs_queued_work_even_when_probe_reports_zero():
+    """Live capacity gates placement of NEW work; already-queued requests
+    (e.g. Algorithm 1's unconditional big-payload -> docker path) must still
+    drain when a probe is stuck at 0."""
+    r = _router(docker_fn=lambda: 0)
+    t = r.submit(Request(rid=0, arrival_t=0.0, data_size=5e6))
+    assert t == Tier.DOCKER                       # r_d > D: placed regardless
+    r.drain()
+    assert not r.backends[Tier.DOCKER].queue
+    assert r.metrics.total == 1 and not r.metrics.failed
+    assert r.results[0] == "ok"
+
+
+def test_tiersim_free_slots_follows_capacity_probe():
+    from repro.core.testbed import paper_tiers
+
+    gauge = CapacityGauge()
+    live = {"n": 5}
+    gauge.register("flask", lambda: live["n"])
+    tier = paper_tiers(seed=0)[Tier.FLASK]
+    static = tier.free_slots()
+    tier.capacity_probe = lambda: gauge.free("flask")
+    assert tier.free_slots() == 5                 # live probe wins
+    live["n"] = 0
+    assert tier.free_slots() == 0
+    gauge.unregister("flask")
+    assert tier.free_slots() == static            # probe gone dark -> queue model
+
+
+def test_place_all_big_payloads_consume_docker_availability():
+    pol = StraightLinePolicy(Thresholds(F=1e9, D=1e3))
+    reqs = [
+        Request(rid=0, arrival_t=0.0, data_size=5e3),   # big -> docker
+        Request(rid=1, arrival_t=0.0, data_size=10.0),  # moderate
+    ]
+    ds = pol.place_all(reqs, f_t=0.0, flask_free=0, docker_free=1)
+    assert ds[0].tier == Tier.DOCKER
+    assert ds[1].tier == Tier.SERVERLESS          # docker slot already consumed

@@ -1,8 +1,7 @@
 """Telemetry, workload generators, HLO analyzer, estimator, router."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_fallback import given, settings, st
 
 from repro.core.telemetry import FrequencyEstimator, Metrics, percentile
 from repro.core.workload import burst, poisson, ramp
