@@ -8,3 +8,8 @@ python -m pip install -q --retries 1 --timeout 5 -r requirements-dev.txt \
     || echo "ci.sh: pip install failed (offline?); continuing with preinstalled deps" >&2
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Model-config smoke subset (forward + grad + prefill/decode per family) so
+# the script the ROADMAP names is actually exercised in CI; the grad leg
+# doubles as a regression gate on the differentiable superblock barrier.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_models.py dense hybrid xlstm

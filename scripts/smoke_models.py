@@ -1,4 +1,10 @@
-"""Fast dev smoke: every family forward + grad + prefill/decode on CPU."""
+"""Fast dev smoke: every family forward + grad + prefill/decode on CPU.
+
+    python scripts/smoke_models.py              # all families
+    python scripts/smoke_models.py dense xlstm  # named subset (CI runs one)
+"""
+import sys
+
 import jax
 import jax.numpy as jnp
 
@@ -47,32 +53,41 @@ base = dict(
     param_dtype=jnp_f32, compute_dtype=jnp_f32, remat="none", attn_chunk=8, ce_chunks=2,
 )
 
-check("dense", ModelConfig(name="dense", family="dense", **base))
-check("dense-bias-mha", ModelConfig(name="mha", family="dense", **{**base, "n_kv_heads": 4, "qkv_bias": True}))
-check("moe", ModelConfig(name="moe", family="moe", moe=MoECfg(n_experts=4, top_k=2), **base))
-check(
-    "hybrid",
-    ModelConfig(
+CONFIGS = {
+    "dense": ModelConfig(name="dense", family="dense", **base),
+    "dense-bias-mha": ModelConfig(name="mha", family="dense", **{**base, "n_kv_heads": 4, "qkv_bias": True}),
+    "moe": ModelConfig(name="moe", family="moe", moe=MoECfg(n_experts=4, top_k=2), **base),
+    "hybrid": ModelConfig(
         name="hybrid", family="hybrid", block_pattern=("attn", "mamba"),
         mamba=MambaCfg(d_state=4, d_conv=4, expand=2, chunk=8),
         moe=MoECfg(n_experts=4, top_k=2, every_k=2), **base,
     ),
-)
-check(
-    "xlstm",
-    ModelConfig(
+    "xlstm": ModelConfig(
         name="xlstm", family="ssm", block_pattern=("mlstm", "slstm"),
         xlstm=XLSTMCfg(chunk=8), **{**base, "d_ff": 0},
     ),
-)
-check("vlm", ModelConfig(name="vlm", family="vlm", inputs="embeds", pos="mrope", mrope_sections=(2, 3, 3), **base))
-check(
-    "whisper",
-    ModelConfig(
+    "vlm": ModelConfig(name="vlm", family="vlm", inputs="embeds", pos="mrope", mrope_sections=(2, 3, 3), **base),
+    "whisper": ModelConfig(
         name="whisper", family="audio", encoder=EncoderCfg(n_layers=2, n_ctx=12, n_heads=4, d_ff=128),
         cross_attn=True, norm="layernorm", act="gelu", gated_mlp=False,
         **{**base, "n_kv_heads": 4},
     ),
-)
-check("kvquant", ModelConfig(name="kvq", family="dense", kv_quant=True, **base))
-print("ALL MODEL SMOKES PASSED")
+    "kvquant": ModelConfig(name="kvq", family="dense", kv_quant=True, **base),
+}
+
+
+def main(names) -> None:
+    unknown = set(names) - set(CONFIGS)
+    if unknown:
+        raise SystemExit(f"unknown smoke config(s) {sorted(unknown)}; have {sorted(CONFIGS)}")
+    selected = names or list(CONFIGS)
+    for name in selected:
+        check(name, CONFIGS[name])
+    if names:
+        print(f"MODEL SMOKES PASSED: {','.join(selected)}")
+    else:
+        print("ALL MODEL SMOKES PASSED")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -82,9 +82,36 @@ class StraightLineRouter:
         self.freq.observe(now)
         f_t = self.freq.frequency(now)
         d = self.policy.place(req, f_t, self._free(Tier.FLASK), self._free(Tier.DOCKER))
-        req.tier = d.tier
-        self.backends[d.tier].queue.append(req)
-        return d.tier
+        tier = d.tier
+        # Admission control (queue_cap): a full backlog deflects to the
+        # elastic serverless tier instead of growing without bound; if even
+        # serverless is saturated the request is rejected outright — a fast
+        # failure the client can retry, not an unbounded queueing delay.
+        b = self.backends[tier]
+        if (
+            tier != Tier.SERVERLESS
+            and len(b.queue) >= b.queue_cap
+            and Tier.SERVERLESS in self.backends
+        ):
+            tier = Tier.SERVERLESS
+            b = self.backends[tier]
+        req.tier = tier
+        if len(b.queue) >= b.queue_cap:
+            self._fail(req, "queue-full")
+            return tier
+        b.queue.append(req)
+        return tier
+
+    def _spill_to_serverless(self, req: Request) -> bool:
+        """Move a retried/hedged request to the serverless queue — but only
+        within its queue_cap; admission control must hold on every enqueue
+        path, not just submit(), or a flapping tier grows it without bound."""
+        b = self.backends.get(Tier.SERVERLESS)
+        if b is None or len(b.queue) >= b.queue_cap:
+            return False
+        req.hedged = True
+        b.queue.append(req)
+        return True
 
     def _run_one(self, b: Backend, req: Request) -> None:
         now = self.clock()
@@ -102,10 +129,10 @@ class StraightLineRouter:
                 self.results[req.rid] = out
                 self.metrics.record(req)
         except Exception as e:  # tier failure
-            if self.retry_on_failure and not req.hedged and req.tier != Tier.SERVERLESS:
-                req.hedged = True
-                self.backends[Tier.SERVERLESS].queue.append(req)
-            else:
+            retryable = (
+                self.retry_on_failure and not req.hedged and req.tier != Tier.SERVERLESS
+            )
+            if not (retryable and self._spill_to_serverless(req)):
                 self._fail(req, f"error:{type(e).__name__}")
         finally:
             b.inflight -= 1
@@ -132,9 +159,10 @@ class StraightLineRouter:
                     and not req.hedged
                     and self.clock() - req.arrival_t > self.hedge_after_s
                     and b.tier != Tier.SERVERLESS
+                    # serverless backlog full -> keep the straggler here
+                    # rather than stack it onto an already-saturated tier
+                    and self._spill_to_serverless(req)
                 ):
-                    req.hedged = True
-                    self.backends[Tier.SERVERLESS].queue.append(req)
                     continue
                 self._run_one(b, req)
                 ran += 1

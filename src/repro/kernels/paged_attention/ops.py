@@ -1,4 +1,7 @@
-"""Model-facing wrapper: (B, 1, H, hd) q against a shared KV page pool."""
+"""Model-facing wrappers for the paged KV pool: decode-time gather-attention
+over block tables, and its write-side twin — the prefill scatter that lands a
+whole prompt's K/V in the pool without ever materializing a dense per-length
+staging cache."""
 from __future__ import annotations
 
 import os
@@ -9,6 +12,30 @@ from repro.kernels.paged_attention.kernel import paged_attention_grouped
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def paged_prefill_write(pool_k, pool_v, k, v, tab_row):
+    """Scatter one prefilled prompt's K/V through its block-table row.
+
+    pool_k/pool_v: (num_pages, KV, ps, hd); k/v: (1, Lp, KV, hd) — Lp may be
+    bucket-padded past the sequence's allocated pages, in which case
+    ``tab_row[t // ps]`` is the reserved null page 0 and the pad writes are
+    absorbed there (never read: the length mask kills those positions).
+    Returns (new_pool_k, new_pool_v)."""
+    ps = pool_k.shape[2]
+    KV = pool_k.shape[1]
+    Lp = k.shape[1]
+    t = jnp.arange(Lp)
+    pages = tab_row[t // ps]
+    offs = t % ps
+    kvh = jnp.arange(KV)
+    new_k = pool_k.at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        k[0].astype(pool_k.dtype)
+    )
+    new_v = pool_v.at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        v[0].astype(pool_v.dtype)
+    )
+    return new_k, new_v
 
 
 def paged_attention(q, pool_k, pool_v, block_tab, lengths, use_pallas: bool = True):

@@ -39,6 +39,16 @@ def _tok(shape) -> jax.ShapeDtypeStruct:
     return jax.ShapeDtypeStruct(shape, jnp.int32)
 
 
+def _last_valid(h: jax.Array, n_valid) -> jax.Array:
+    """Hidden state of the last *valid* token of a right-padded prefill.
+    h: (B, S, d); n_valid: (B,) or scalar. Returns (B, 1, d)."""
+    if n_valid is None:
+        return h
+    B, S, _ = h.shape
+    idx = jnp.clip(jnp.asarray(n_valid, jnp.int32).reshape(-1) - 1, 0, S - 1)
+    return h[jnp.arange(B), idx][:, None, :]
+
+
 @dataclass
 class DecoderLM:
     cfg: ModelConfig
@@ -84,18 +94,47 @@ class DecoderLM:
         return loss, metrics
 
     def prefill(self, ctx, params, batch: Mapping, cap: int = 0):
+        """Dense prefill. An optional ``batch["n_valid"]`` (B,) marks
+        right-padded prompts: pad positions are identity for every stateful
+        update and the emitted token comes from the last valid position."""
         tokens = batch["tokens"]
         B, S = tokens.shape
         cap = cap or S
+        n_valid = batch.get("n_valid")
         pos = batch.get("positions")
         if pos is None:
             pos = self._positions(B, S)
         cache = self.init_cache(B, cap)
         h, cache, _ = tf.forward(
             self.cfg, ctx, params, tokens=tokens, positions=pos,
-            mode="prefill", cache=cache, cache_index=0,
+            mode="prefill", cache=cache, cache_index=0, n_valid=n_valid,
         )
-        return next_tokens(self.cfg, ctx, params, h), cache
+        return next_tokens(self.cfg, ctx, params, _last_valid(h, n_valid)), cache
+
+    def prefill_paged(self, ctx, params, batch: Mapping, cache):
+        """Paged prefill of ONE sequence straight into the shared page pool.
+
+        batch: tokens (1, Lp) right-padded to a bucket length, n_valid (1,),
+        tab_row (P,) block-table row, slot scalar (recurrent-state slot).
+        Attention K/V scatter through the block table inside each layer (no
+        dense per-length staging cache); recurrent mixers run from zero state
+        and land their final state in ``slot``. Returns (next_token, cache)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        assert B == 1, "prefill_paged scatters through ONE block-table row; B must be 1"
+        n_valid = batch.get("n_valid")
+        pos = batch.get("positions")
+        if pos is None:
+            pos = self._positions(B, S)
+        pidx = attn_mod.PagedPrefillIndex(
+            tab_row=jnp.asarray(batch["tab_row"], jnp.int32),
+            slot=jnp.asarray(batch["slot"], jnp.int32),
+        )
+        h, cache, _ = tf.forward(
+            self.cfg, ctx, params, tokens=tokens, positions=pos,
+            mode="prefill", cache=cache, cache_index=pidx, n_valid=n_valid,
+        )
+        return next_tokens(self.cfg, ctx, params, _last_valid(h, n_valid)), cache
 
     def decode(self, ctx, params, cache, batch: Mapping):
         tok = batch["token"]
@@ -158,15 +197,16 @@ class EmbedsLM(DecoderLM):
         emb = batch["inputs_embeds"]
         B, S, _ = emb.shape
         cap = cap or S
+        n_valid = batch.get("n_valid")
         pos = batch.get("positions")
         if pos is None:
             pos = self._positions(B, S)
         cache = self.init_cache(B, cap)
         h, cache, _ = tf.forward(
             self.cfg, ctx, params, inputs_embeds=emb, positions=pos,
-            mode="prefill", cache=cache, cache_index=0,
+            mode="prefill", cache=cache, cache_index=0, n_valid=n_valid,
         )
-        return next_tokens(self.cfg, ctx, params, h), cache
+        return next_tokens(self.cfg, ctx, params, _last_valid(h, n_valid)), cache
 
     def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
         B, S, d = shape.global_batch, shape.seq_len, self.cfg.d_model
@@ -209,13 +249,15 @@ class EncDecLM(DecoderLM):
         tokens = batch["tokens"]
         B, S = tokens.shape
         cap = cap or S
+        n_valid = batch.get("n_valid")
         pos = self._positions(B, S)
         cache = self.init_cache(B, cap)
         h, cache, _ = wh.forward(
             self.cfg, ctx, params, frames=batch["frames"], tokens=tokens,
             positions=pos, mode="prefill", cache=cache, cache_index=0,
+            n_valid=n_valid,
         )
-        return next_tokens(self.cfg, ctx, params["decoder"], h), cache
+        return next_tokens(self.cfg, ctx, params["decoder"], _last_valid(h, n_valid)), cache
 
     def decode(self, ctx, params, cache, batch: Mapping):
         tok = batch["token"]

@@ -85,6 +85,19 @@ class PagedIndex(NamedTuple):
     block_tab: jax.Array
 
 
+class PagedPrefillIndex(NamedTuple):
+    """Prefill-time cache address for the paged path (one sequence).
+
+    tab_row: (P,) int32 — the sequence's block-table row; token t scatters to
+    (tab_row[t // ps], t % ps). Bucket padding beyond the allocated pages
+    maps to the reserved null page 0 (harmless by construction).
+    slot: scalar int32 — decode-batch slot owning the recurrent (SSM) state.
+    """
+
+    tab_row: jax.Array
+    slot: jax.Array
+
+
 def paged_kv_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int, n_heads: int = 0) -> dict:
     """ShapeDtypeStructs for one attention layer's shared page pool."""
     H = n_heads or cfg.n_heads
@@ -123,21 +136,13 @@ def paged_cache_kv(cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array,
 
 def paged_write_prompt(cache: Mapping, k: jax.Array, v: jax.Array, tab_row: jax.Array) -> dict:
     """Write a whole prefilled prompt (1, Lp, KV, hd) through one sequence's
-    block-table row (P,) into the pool; token t -> (tab_row[t//ps], t%ps)."""
-    ps = cache["k"].shape[2]
-    KV = cache["k"].shape[1]
-    Lp = k.shape[1]
-    t = jnp.arange(Lp)
-    pages = tab_row[t // ps]
-    offs = t % ps
-    kvh = jnp.arange(KV)
+    block-table row (P,) into the pool; token t -> (tab_row[t//ps], t%ps).
+    The scatter itself lives with the paged kernels (the decode gather's
+    write-side twin)."""
+    from repro.kernels.paged_attention import ops as pa_ops
+
     out = dict(cache)
-    out["k"] = cache["k"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
-        k[0].astype(cache["k"].dtype)
-    )
-    out["v"] = cache["v"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
-        v[0].astype(cache["v"].dtype)
-    )
+    out["k"], out["v"] = pa_ops.paged_prefill_write(cache["k"], cache["v"], k, v, tab_row)
     return out
 
 
@@ -367,6 +372,12 @@ def self_attention(
 
     new_cache = cache
     if mode == "train":
+        o = chunked_attention(cfg, q, k, v, pos_t, pos_t, causal=causal)
+    elif mode == "prefill" and isinstance(cache_index, PagedPrefillIndex):
+        # truly paged prefill: K/V scatter straight through the block table
+        # into the page pool — no dense per-length staging cache exists.
+        assert cache is not None
+        new_cache = paged_write_prompt(cache, k, v, cache_index.tab_row)
         o = chunked_attention(cfg, q, k, v, pos_t, pos_t, causal=causal)
     elif mode == "prefill":
         assert cache is not None

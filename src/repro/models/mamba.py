@@ -53,9 +53,21 @@ def mamba_cache_defs(cfg: ModelConfig, batch: int) -> dict:
     }
 
 
-def _causal_conv(cfg: ModelConfig, p: Mapping, x: jax.Array, state: Optional[jax.Array]):
+def conv_state_at(xp: jax.Array, n_valid: jax.Array, K: int) -> jax.Array:
+    """Rolling conv state as of the last *valid* token of a right-padded
+    sequence. xp is the state-prepended input (B, S+K-1, dI), so the K-1
+    inputs ending at token n_valid-1 live at xp[:, n_valid : n_valid+K-1]."""
+    return jax.vmap(
+        lambda row, s: jax.lax.dynamic_slice_in_dim(row, s, K - 1, axis=0)
+    )(xp, jnp.asarray(n_valid, jnp.int32))
+
+
+def _causal_conv(
+    cfg: ModelConfig, p: Mapping, x: jax.Array, state: Optional[jax.Array], n_valid=None
+):
     """Depthwise causal conv1d. x: (B, S, dI); state: (B, K-1, dI) or None.
-    Returns (out (B,S,dI), new_state (B,K-1,dI))."""
+    Returns (out (B,S,dI), new_state (B,K-1,dI)). ``n_valid`` (B,) makes the
+    carried state reflect the last valid token instead of trailing padding."""
     B, S, dI = x.shape
     K = cfg.mamba.d_conv
     if state is None:
@@ -66,7 +78,12 @@ def _causal_conv(cfg: ModelConfig, p: Mapping, x: jax.Array, state: Optional[jax
     for k in range(K):
         out = out + xp[:, k : k + S, :] * w[k]
     out = out + p["conv_b"].astype(x.dtype)
-    new_state = xp[:, S:, :] if K > 1 else state
+    if K <= 1:
+        new_state = state
+    elif n_valid is None:
+        new_state = xp[:, S:, :]
+    else:
+        new_state = conv_state_at(xp, n_valid, K)
     return out, new_state
 
 
@@ -105,14 +122,21 @@ def mamba_mixer(
     x: jax.Array,
     mode: str,
     cache: Optional[Mapping] = None,
+    valid=None,
 ):
-    """x: (B, S, d). Returns (out (B,S,d), new_cache)."""
+    """x: (B, S, d). Returns (out (B,S,d), new_cache).
+
+    ``valid`` (B, S) bool marks right-padded prefill: pad steps must be
+    identity on the carried state. Masking dt to 0 does exactly that —
+    Abar = exp(0·A) = 1 and the input contribution dt·x·B vanishes — and the
+    conv state is gathered at the last valid token."""
     B, S, d = x.shape
     dI, _, dS = _dims(cfg)
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
     xp, z = jnp.split(xz, 2, axis=-1)
 
     conv_state = cache["conv"] if cache is not None else None
+    n_valid = jnp.sum(valid, axis=1).astype(jnp.int32) if valid is not None else None
     if mode == "decode":
         # single (or few) step(s): exact recurrence
         xc, new_conv = _causal_conv(cfg, p, xp, conv_state)
@@ -127,9 +151,11 @@ def mamba_mixer(
         y = jnp.stack(ys, axis=1)
         new_cache = {"conv": new_conv, "ssm": h}
     else:
-        xc, new_conv = _causal_conv(cfg, p, xp, conv_state)
+        xc, new_conv = _causal_conv(cfg, p, xp, conv_state, n_valid=n_valid)
         xc = jax.nn.silu(xc)
         dt, Bc, Cc, A = _ssm_inputs(cfg, p, xc)
+        if valid is not None:
+            dt = jnp.where(valid[..., None], dt, 0.0)   # pad step == identity
         chunk = min(cfg.mamba.chunk, S)
         if S % chunk != 0:
             chunk = S

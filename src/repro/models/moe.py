@@ -25,11 +25,7 @@ import jax.numpy as jnp
 
 from repro.models.common import FSDP, NULL, TP, ModelConfig, ParamDef, activation
 from repro.models.quant import qeinsum
-
-try:  # JAX >= 0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.sharding.compat import shard_map_nocheck
 
 
 def moe_defs(cfg: ModelConfig) -> dict:
@@ -76,6 +72,7 @@ def moe_core(
     w2: jax.Array,             # (E_local, f, d)
     e_offset,                  # first global expert id held by this shard
     capacity: int,
+    valid=None,                # (T,) bool — padding tokens never claim capacity
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (out (T, d), aux_loss scalar)."""
     m = cfg.moe
@@ -87,6 +84,10 @@ def moe_core(
 
     eids = e_offset + jnp.arange(E_local)                          # (E_local,)
     match = topi[None, :, :] == eids[:, None, None]                # (E_local, T, k)
+    if valid is not None:
+        # padded prefill: a pad token must neither displace a valid token
+        # from an expert's top-C slots nor contribute output anywhere
+        match = match & valid[None, :, None]
     w_te = jnp.sum(match * topv[None], axis=-1)                    # (E_local, T)
     assigned = jnp.any(match, axis=-1)                             # (E_local, T)
 
@@ -94,6 +95,18 @@ def moe_core(
     score = assigned.astype(jnp.float32) + w_te
     _, sel_idx = jax.lax.top_k(score, capacity)                    # (E_local, C)
     sel_valid = jnp.take_along_axis(assigned, sel_idx, axis=-1)    # (E_local, C)
+    if valid is not None:
+        # bucket padding must not inflate expert capacity: the static C was
+        # sized from the padded token count, so re-derive capacity_for() at
+        # the dynamic valid count and keep only that top-ranked prefix —
+        # exactly the slots an unpadded run of the same tokens would have.
+        # A host-precomputed table (valid count is bounded by the static T)
+        # keeps the arithmetic bit-identical to capacity_for's Python floats.
+        caps = jnp.asarray(
+            [0] + [capacity_for(cfg, t) for t in range(1, T + 1)], jnp.int32
+        )
+        dyn_c = caps[jnp.sum(valid)]
+        sel_valid = sel_valid & (jnp.arange(capacity)[None, :] < dyn_c)
     gate = jnp.take_along_axis(w_te, sel_idx, axis=-1) * sel_valid
 
     xg = jnp.take(x_flat, sel_idx.reshape(-1), axis=0).reshape(E_local, capacity, -1)
@@ -117,15 +130,18 @@ def moe_core(
 # ---------------------------------------------------------------------------
 
 
-def moe_ffn(cfg: ModelConfig, ctx, p: Mapping, x: jax.Array):
-    """x: (B, S, d) — replicated over TP, batch-sharded. Returns (out, aux)."""
+def moe_ffn(cfg: ModelConfig, ctx, p: Mapping, x: jax.Array, valid=None):
+    """x: (B, S, d) — replicated over TP, batch-sharded. ``valid`` (B, S)
+    bool marks right-padded prefill tokens to exclude from expert-capacity
+    competition. Returns (out, aux)."""
     B, S, d = x.shape
     w3 = p.get("w3")
     if ctx is None or ctx.tp_size == 1:
         x_flat = x.reshape(B * S, d)
         logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), p["router"].astype(jnp.float32))
         cap = capacity_for(cfg, B * S)
-        out, aux = moe_core(cfg, x_flat, logits, p["w1"], w3, p["w2"], 0, cap)
+        v_flat = valid.reshape(B * S) if valid is not None else None
+        out, aux = moe_core(cfg, x_flat, logits, p["w1"], w3, p["w2"], 0, cap, valid=v_flat)
         return out.reshape(B, S, d), aux
 
     mesh = ctx.mesh
@@ -170,7 +186,11 @@ def moe_ffn(cfg: ModelConfig, ctx, p: Mapping, x: jax.Array):
             }
         return jax.lax.all_gather(w, ctx.fsdp_axis, axis=axis, tiled=True)
 
-    def shard_fn(x_l, rw, w1, w3_, w2):
+    # statically known: only padded prefill carries a real mask — unpadded
+    # train/decode must stay on the pre-existing static-capacity path
+    has_mask = valid is not None
+
+    def shard_fn(x_l, rw, w1, w3_, w2, valid_l=None):
         Bl, Sl, dl = x_l.shape
         if m.fsdp_experts:
             w1 = _gather_w(w1, 2)
@@ -180,25 +200,34 @@ def moe_ffn(cfg: ModelConfig, ctx, p: Mapping, x: jax.Array):
         x_flat = x_l.reshape(Bl * Sl, dl)
         logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), rw.astype(jnp.float32))
         e_off = jax.lax.axis_index(ctx.tp_axis) * (m.n_experts // ctx.tp_size)
-        out, aux = moe_core(cfg, x_flat, logits, w1, w3_, w2, e_off, cap)
+        out, aux = moe_core(
+            cfg, x_flat, logits, w1, w3_, w2, e_off, cap,
+            valid=valid_l.reshape(Bl * Sl) if has_mask else None,
+        )
         out = jax.lax.psum(out, ctx.tp_axis)
         aux = jax.lax.pmean(aux, ctx.batch_axes) if ctx.batch_axes else aux
         return out.reshape(Bl, Sl, dl), aux
 
-    def shard_fn_tokens(x_l, rw, w1, w3_, w2):
+    def shard_fn_tokens(x_l, rw, w1, w3_, w2, valid_l=None):
         """Decode-mode layout: tokens are tiny — all-gather THEM over the
         fsdp axis and keep expert weights sharded (experts x 'model',
         d_ff x 'data'). Per-layer wire drops from gigabytes (weight
         gathers) to a few MB (token gather + partial-output psum)."""
         Bl, Sl, dl = x_l.shape
         xg = x_l
+        vg = valid_l
         for ax in reversed(ctx.batch_axes):
             xg = jax.lax.all_gather(xg, ax, axis=0, tiled=True)
+            if has_mask:
+                vg = jax.lax.all_gather(vg, ax, axis=0, tiled=True)
         T = xg.shape[0] * Sl
         x_flat = xg.reshape(T, dl)
         logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), rw.astype(jnp.float32))
         e_off = jax.lax.axis_index(ctx.tp_axis) * (m.n_experts // ctx.tp_size)
-        out, aux = moe_core(cfg, x_flat, logits, w1, w3_, w2, e_off, cap)
+        out, aux = moe_core(
+            cfg, x_flat, logits, w1, w3_, w2, e_off, cap,
+            valid=vg.reshape(T) if has_mask else None,
+        )
         # partial over d_ff ('data') and experts ('model') — one combined psum
         out = jax.lax.psum(out, (ctx.fsdp_axis, ctx.tp_axis))
         # slice this shard's tokens back out
@@ -212,20 +241,20 @@ def moe_ffn(cfg: ModelConfig, ctx, p: Mapping, x: jax.Array):
     w1_arg = p["w1"]
     w3_arg = w3 if w3 is not None else p["w1"]
     w2_arg = p["w2"]
-    in_specs = (
+    args = [x, p["router"], w1_arg, w3_arg, w2_arg]
+    in_specs = [
         x_spec,
         r_spec,
         spec_tree_for(w1_arg, w1_s3),
         spec_tree_for(w3_arg, w1_s3),
         spec_tree_for(w2_arg, w2_s3),
-    )
+    ]
+    if has_mask:
+        args.append(valid)
+        in_specs.append(P(batch_spec, None))
     out_specs = (x_spec, jax.sharding.PartitionSpec())
-    fn = _shard_map(
-        fn_body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        check_vma=False,
+    fn = shard_map_nocheck(
+        fn_body, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs
     )
-    out, aux = fn(x, p["router"], w1_arg, w3_arg, w2_arg)
+    out, aux = fn(*args)
     return out, aux

@@ -37,6 +37,29 @@ from repro.models.moe import moe_defs, moe_ffn
 MIXER_KINDS = ("attn", "mamba", "mlstm", "slstm")
 
 
+@jax.custom_vjp
+def _loop_barrier(tree):
+    """``optimization_barrier`` that is transparent to reverse-mode AD.
+
+    The barrier primitive has no differentiation rule; training (jax.grad)
+    through the superblock scan needs one. The pass-through VJP keeps the
+    barrier in the primal graph (where it blocks loop-invariant hoisting of
+    weight gathers / upcasts / dequants) while the cotangent flows through
+    untouched."""
+    return jax.lax.optimization_barrier(tree)
+
+
+def _loop_barrier_fwd(tree):
+    return jax.lax.optimization_barrier(tree), None
+
+
+def _loop_barrier_bwd(_, ct):
+    return (ct,)
+
+
+_loop_barrier.defvjp(_loop_barrier_fwd, _loop_barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Param / cache definitions
 # ---------------------------------------------------------------------------
@@ -168,6 +191,7 @@ def _superblock(
     cache_index,
     enc_out,
     causal: bool,
+    valid=None,
 ):
     new_cache: dict = {}
     aux = jnp.zeros((), jnp.float32)
@@ -177,9 +201,14 @@ def _superblock(
     # layer's gathered experts at once — 100s of GB for llama4/jamba),
     # (b) bf16->f32 weight upcasts (CPU backend), (c) int8->bf16 KV-cache
     # dequants — all per-layer transients that must stay inside the loop.
-    p = jax.lax.optimization_barrier(p)
+    p = _loop_barrier(p)
     if cache_sb is not None:
-        cache_sb = jax.lax.optimization_barrier(cache_sb)
+        cache_sb = _loop_barrier(cache_sb)
+    # Paged prefill: attention layers write straight through the sequence's
+    # block-table row into the shared page pool; recurrent mixers run from a
+    # zero state (a fresh sequence) and their final state lands in the slot.
+    paged_pf = isinstance(cache_index, attn.PagedPrefillIndex)
+    recurrent = {"mamba": mam.mamba_mixer, "mlstm": xl.mlstm_mixer, "slstm": xl.slstm_mixer}
     for i, kind in enumerate(cfg.block_pattern):
         h = apply_norm(cfg, p[f"l{i}_norm"], x)
         c_in = cache_sb.get(f"l{i}_mixer") if cache_sb is not None else None
@@ -187,12 +216,18 @@ def _superblock(
             h, c_out = attn.self_attention(
                 cfg, p[f"l{i}_mixer"], h, positions, mode, c_in, cache_index, causal=causal
             )
-        elif kind == "mamba":
-            h, c_out = mam.mamba_mixer(cfg, p[f"l{i}_mixer"], h, mode, c_in)
-        elif kind == "mlstm":
-            h, c_out = xl.mlstm_mixer(cfg, p[f"l{i}_mixer"], h, mode, c_in)
-        elif kind == "slstm":
-            h, c_out = xl.slstm_mixer(cfg, p[f"l{i}_mixer"], h, mode, c_in)
+        elif paged_pf and c_in is not None:
+            zero = jax.tree.map(lambda l: jnp.zeros((1,) + l.shape[1:], l.dtype), c_in)
+            h, c_part = recurrent[kind](cfg, p[f"l{i}_mixer"], h, mode, zero, valid=valid)
+            c_out = jax.tree.map(
+                lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                    full, part.astype(full.dtype), cache_index.slot, axis=0
+                ),
+                c_in,
+                c_part,
+            )
+        else:
+            h, c_out = recurrent[kind](cfg, p[f"l{i}_mixer"], h, mode, c_in, valid=valid)
         x = x + h
         if cache_sb is not None:
             new_cache[f"l{i}_mixer"] = c_out
@@ -210,7 +245,7 @@ def _superblock(
         if cfg.d_ff > 0:
             h = apply_norm(cfg, p[f"l{i}_ffn_norm"], x)
             if cfg.layer_has_moe(i):
-                h, a = moe_ffn(cfg, ctx, p[f"l{i}_ffn"], h)
+                h, a = moe_ffn(cfg, ctx, p[f"l{i}_ffn"], h, valid=valid)
                 aux = aux + a
             else:
                 h = mlp(cfg, p[f"l{i}_ffn"], h)
@@ -238,6 +273,7 @@ def run_stack(
     cache_index=None,
     enc_out=None,
     causal: bool = True,
+    valid=None,
 ):
     """Scan the superblock stack. Returns (x, new_cache, aux)."""
     remat = mode == "train" and cfg.remat != "none"
@@ -245,7 +281,7 @@ def run_stack(
     if cache is None:
         def body(carry, p_sb):
             xx, aux = carry
-            xx, _, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, None, cache_index, enc_out, causal)
+            xx, _, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, None, cache_index, enc_out, causal, valid)
             return (xx, aux + a), None
 
         body = _remat_wrap(cfg, body) if remat else body
@@ -257,7 +293,7 @@ def run_stack(
     def body(carry, sb):
         xx, aux = carry
         p_sb, c_sb = sb
-        xx, c_new, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, c_sb, cache_index, enc_out, causal)
+        xx, c_new, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, c_sb, cache_index, enc_out, causal, valid)
         return (xx, aux + a), c_new
 
     body = _remat_wrap(cfg, body) if remat else body
@@ -279,15 +315,27 @@ def forward(
     cache: Optional[Mapping] = None,
     cache_index=None,
     enc_out=None,
+    n_valid=None,
 ) -> Tuple[jax.Array, Optional[Mapping], jax.Array]:
-    """Returns (hidden (B,S,d) post-final-norm, new_cache, moe_aux)."""
+    """Returns (hidden (B,S,d) post-final-norm, new_cache, moe_aux).
+
+    ``n_valid`` (B,) marks right-padded prefill: tokens at positions >=
+    n_valid[b] are padding and must be identity for every stateful update —
+    causal attention ignores them for free, recurrent mixers and the MoE
+    router receive the derived ``valid`` mask."""
     if inputs_embeds is not None:
         x = inputs_embeds.astype(cfg.compute_dtype)
     else:
         x = embed_tokens(cfg, params, tokens)
+    valid = None
+    if n_valid is not None:
+        S = x.shape[1]
+        nv = jnp.asarray(n_valid, jnp.int32).reshape(-1, 1)
+        valid = jnp.arange(S, dtype=jnp.int32)[None, :] < nv
     x = _constrain(ctx, x)
     x, new_cache, aux = run_stack(
-        cfg, ctx, params["blocks"], x, positions, mode, cache, cache_index, enc_out
+        cfg, ctx, params["blocks"], x, positions, mode, cache, cache_index, enc_out,
+        valid=valid,
     )
     x = apply_norm(cfg, params["final_norm"], x)
     return x, new_cache, aux

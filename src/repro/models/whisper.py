@@ -70,11 +70,15 @@ def forward(
     cache=None,
     cache_index=None,
     enc_out=None,
+    n_valid=None,
 ):
-    """Returns (decoder hidden, new_cache, aux). Encoder runs in train/prefill."""
+    """Returns (decoder hidden, new_cache, aux). Encoder runs in train/prefill.
+    ``n_valid`` marks right-padded decoder prefill (cross-attention K/V come
+    from the encoder, so only the causal decoder stack needs the mask)."""
     if mode in ("train", "prefill"):
         enc_out = encode(cfg, ctx, params, frames)
     return tf.forward(
         cfg, ctx, params["decoder"], tokens=tokens, positions=positions,
         mode=mode, cache=cache, cache_index=cache_index, enc_out=enc_out,
+        n_valid=n_valid,
     )

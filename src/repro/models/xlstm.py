@@ -18,8 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import NULL, TP, ModelConfig, ParamDef, rmsnorm
+from repro.models.mamba import conv_state_at
 
 NEG = -1e30
+# A forget-gate preactivation this large makes log_sigmoid(f) exactly 0.0 in
+# f32 (softplus(-BIG) underflows), so a masked pad step multiplies the state
+# by exp(0) == 1 — bit-exact identity, not merely approximate.
+BIG = 1e9
 
 
 def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
@@ -66,7 +71,7 @@ def mlstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
     }
 
 
-def _conv(cfg: ModelConfig, p: Mapping, x: jax.Array, state):
+def _conv(cfg: ModelConfig, p: Mapping, x: jax.Array, state, n_valid=None):
     B, S, dU = x.shape
     K = cfg.xlstm.conv
     if state is None:
@@ -76,7 +81,8 @@ def _conv(cfg: ModelConfig, p: Mapping, x: jax.Array, state):
     w = p["conv_w"].astype(x.dtype)
     for k in range(K):
         out = out + xp[:, k : k + S, :] * w[k]
-    return jax.nn.silu(out + p["conv_b"].astype(x.dtype)), xp[:, S:, :]
+    new_state = xp[:, S:, :] if n_valid is None else conv_state_at(xp, n_valid, K)
+    return jax.nn.silu(out + p["conv_b"].astype(x.dtype)), new_state
 
 
 def _qkvif(cfg: ModelConfig, p: Mapping, xm: jax.Array, xc: jax.Array):
@@ -182,16 +188,25 @@ def mlstm_chunkwise(cfg, q, k, v, i, f, C0, n0, m0):
     return hs.swapaxes(0, 1).reshape(B, S, NH, DH), carry
 
 
-def mlstm_mixer(cfg: ModelConfig, p: Mapping, x: jax.Array, mode: str, cache=None):
-    """x: (B,S,d) -> (out, new_cache)."""
+def mlstm_mixer(cfg: ModelConfig, p: Mapping, x: jax.Array, mode: str, cache=None, valid=None):
+    """x: (B,S,d) -> (out, new_cache).
+
+    ``valid`` (B, S) bool marks right-padded prefill. Identity pad steps via
+    the gates: i -> NEG kills the input branch (exp(i - m) == 0) and
+    f -> BIG makes the retain factor exp(log_sigmoid(f)) == 1 exactly, in
+    both the sequential and chunkwise (incl. Pallas) forms."""
     B, S, d = x.shape
     dU, DH = _mlstm_dims(cfg)
     NH = cfg.n_heads
     xz = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
     xu, z = jnp.split(xz, 2, axis=-1)
     conv_state = cache["conv"] if cache is not None else None
-    xm, new_conv = _conv(cfg, p, xu, conv_state)
+    n_valid = jnp.sum(valid, axis=1).astype(jnp.int32) if valid is not None else None
+    xm, new_conv = _conv(cfg, p, xu, conv_state, n_valid=n_valid)
     q, k, v, i, f = _qkvif(cfg, p, xm, xu)
+    if valid is not None:
+        i = jnp.where(valid[..., None], i, NEG)
+        f = jnp.where(valid[..., None], f, BIG)
 
     if cache is not None:
         C0, n0, m0 = cache["C"], cache["n"], cache["m"]
@@ -246,8 +261,9 @@ def slstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
     return {"c": sd(), "n": sd(), "h": sd(), "m": jax.ShapeDtypeStruct((batch, NH), jnp.float32)}
 
 
-def slstm_mixer(cfg: ModelConfig, p: Mapping, x: jax.Array, mode: str, cache=None):
-    """Sequential sLSTM with exponential gating and head-wise recurrence."""
+def slstm_mixer(cfg: ModelConfig, p: Mapping, x: jax.Array, mode: str, cache=None, valid=None):
+    """Sequential sLSTM with exponential gating and head-wise recurrence.
+    ``valid`` (B, S) bool: pad steps keep the previous carry unchanged."""
     B, S, d = x.shape
     NH = cfg.n_heads
     DH = d // NH
@@ -266,24 +282,34 @@ def slstm_mixer(cfg: ModelConfig, p: Mapping, x: jax.Array, mode: str, cache=Non
         h0 = jnp.zeros((B, NH, DH), jnp.float32)
         m0 = jnp.zeros((B, NH), jnp.float32)
 
-    def step(carry, wt):
-        c, n, h, m = carry
-        pre = wt + jnp.einsum("bhd,hde->bhe", h, R)          # (B,NH,4DH)
+    def step(carry, inp):
+        c0_, n0_, h0_, m0_ = carry
+        wt, vt = inp                                          # vt: (B,) valid mask
+        pre = wt + jnp.einsum("bhd,hde->bhe", h0_, R)         # (B,NH,4DH)
         zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
         # scalar-per-cell exponential gating with stabilizer (max over cell dims)
         i_s = jnp.max(it, axis=-1)                            # (B,NH) stabilizer proxy
         f_s = jax.nn.log_sigmoid(jnp.max(ft, axis=-1))
-        m_new = jnp.maximum(f_s + m, i_s)
+        m_new = jnp.maximum(f_s + m0_, i_s)
         i_g = jnp.exp(it - m_new[..., None])
-        f_g = jnp.exp(jax.nn.log_sigmoid(ft) + m[..., None] - m_new[..., None])
+        f_g = jnp.exp(jax.nn.log_sigmoid(ft) + m0_[..., None] - m_new[..., None])
         z_g = jnp.tanh(zt)
         o_g = jax.nn.sigmoid(ot)
-        c = f_g * c + i_g * z_g
-        n = f_g * n + i_g
+        c = f_g * c0_ + i_g * z_g
+        n = f_g * n0_ + i_g
         h = o_g * c / jnp.maximum(n, 1.0)
-        return (c, n, h, m_new), h
+        # pad steps carry the previous state through untouched
+        keep = vt[:, None, None]
+        c = jnp.where(keep, c, c0_)
+        n = jnp.where(keep, n, n0_)
+        h_c = jnp.where(keep, h, h0_)
+        m_c = jnp.where(keep[..., 0], m_new, m0_)
+        return (c, n, h_c, m_c), h
 
-    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), jnp.moveaxis(wx, 1, 0))
+    vmask = valid if valid is not None else jnp.ones((B, S), bool)
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (c0, n0, h0, m0), (jnp.moveaxis(wx, 1, 0), jnp.moveaxis(vmask, 1, 0))
+    )
     hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
     hs = rmsnorm(hs, p["hnorm"])
     out = jnp.einsum("bsd,de->bse", hs, p["out_proj"].astype(x.dtype))

@@ -1,4 +1,5 @@
-"""Batched inference engines: prefill + decode with continuous batching.
+"""Batched inference engines: bucketed pad-aware prefill + continuous-batch
+decode, one execution path from models to both cache layouts.
 
 Two engines back the serving tiers:
 
@@ -10,8 +11,21 @@ Two engines back the serving tiers:
   fixed-size pages (serving/paging.py); sequences own page lists, admission
   is gated on *free pages* rather than free slots, and page exhaustion
   preempts the newest sequence back to the waiting queue (recompute-style
-  resume, vLLM-like). The engine exports ``free_pages()`` /
-  ``capacity_now()`` so the StraightLine placer sees live capacity.
+  resume, vLLM-like). Prefill is *truly paged*: attention K/V scatter
+  through the sequence's block-table row inside each layer
+  (``model.prefill_paged``) — no dense per-length staging cache exists.
+
+Bounded compilation (shared ``_EngineBase`` bucketing): every prompt — and
+every preemption-resume context, which otherwise multiplies distinct
+lengths — is right-padded to a power-of-two multiple of the page/bucket
+unit, capped at the engine's length cap. Prefill therefore compiles at most
+``num_buckets(unit, cap)`` = ceil(log2(cap/unit)) + 1 times regardless of
+the traffic mix, instead of once per distinct context length; padding is
+masked out of attention writes, logits, and the recurrent-state updates of
+mamba/xlstm mixers (pad steps are identity), so bucketed serving is
+token-for-token identical to unbucketed. ``compile_events`` — the number of
+distinct prefill shapes executed — is exported through ``capacity_now()``
+so the placer and telemetry can see warm-up state.
 
 The jitted functions are built once per engine from the same step builders
 the dry-run lowers, so what serves here is what was dry-run there.
@@ -27,9 +41,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import attention as attn_mod
 from repro.models import get_model
-from repro.serving.paging import NULL_PAGE, BlockAllocator, OutOfPages, PageTable
+from repro.serving.paging import (
+    NULL_PAGE,
+    BlockAllocator,
+    OutOfPages,
+    PageTable,
+    bucket_tokens,
+)
 
 
 @dataclass
@@ -38,6 +57,8 @@ class EngineConfig:
     max_len: int = 256
     max_new_tokens: int = 32
     eos_id: int = -1            # -1: never stop early
+    bucket_unit: int = 16       # prefill pad quantum (the dense "page unit")
+    bucket_prefill: bool = True # False: one prefill compile per distinct length
 
 
 @dataclass
@@ -56,9 +77,10 @@ class Sequence:
 class _EngineBase:
     """Shared continuous-batching scaffolding: submission bookkeeping, the
     stop conditions (applied identically at admission and after decode so
-    the dense/paged engines stay token-for-token interchangeable), and the
-    synchronous generate loop. Subclasses provide ``step()`` and set
-    ``_max_new`` / ``_eos`` / ``_len_cap``."""
+    the dense/paged engines stay token-for-token interchangeable), prefill
+    length bucketing with its compile-event accounting, and the synchronous
+    generate loop. Subclasses provide ``step()`` and set ``_max_new`` /
+    ``_eos`` / ``_len_cap`` / ``_bucket_unit`` / ``_bucket_on``."""
 
     def free_slots(self) -> int:
         return sum(1 for s in self.slot_seq if s is None)
@@ -68,6 +90,29 @@ class _EngineBase:
         self._sid += 1
         self.waiting.append(seq)
         return seq.sid
+
+    # -- bucketed prefill shapes ---------------------------------------------
+    def _bucket_len(self, n: int) -> int:
+        if not self._bucket_on:
+            return n
+        return bucket_tokens(n, self._bucket_unit, self._len_cap)
+
+    def _pad_context(self, ctx_toks: List[int]):
+        """Right-pad a context to its bucket; returns (tokens, n_valid, Lp).
+        Records the shape so ``compile_events`` tracks distinct prefill
+        compilations (jit caches per shape, so #shapes == #compiles)."""
+        n = len(ctx_toks)
+        Lp = self._bucket_len(n)
+        self._prefill_shapes.add(Lp)
+        toks = np.zeros(Lp, np.int32)
+        toks[:n] = ctx_toks
+        return toks, n, Lp
+
+    @property
+    def compile_events(self) -> int:
+        """Distinct prefill shapes executed so far — the engine's warm-up
+        state. Placer/telemetry read it via ``capacity_now()``."""
+        return len(self._prefill_shapes)
 
     def _stop_hit(self, seq: Sequence, tok: int, cache_len: int) -> bool:
         return (
@@ -96,6 +141,8 @@ class InferenceEngine(_EngineBase):
         self.model = get_model(cfg)
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
         self._max_new, self._eos, self._len_cap = ecfg.max_new_tokens, ecfg.eos_id, ecfg.max_len
+        self._bucket_unit, self._bucket_on = ecfg.bucket_unit, ecfg.bucket_prefill
+        self._prefill_shapes = set()
         B, L = ecfg.max_slots, ecfg.max_len
         self.cache = self.model.init_cache(B, L)
         self.slot_len = np.zeros(B, np.int32)        # tokens in cache per slot
@@ -111,9 +158,13 @@ class InferenceEngine(_EngineBase):
         B, L = self.ecfg.max_slots, self.ecfg.max_len
 
         def prefill_slot(params, cache, tokens, slot, n_valid):
-            """Prefill a single slot with a right-padded prompt of length L_p."""
+            """Prefill a single slot with a right-padded prompt of length L_p;
+            positions >= n_valid are bucket padding, masked out of every
+            stateful update and of the emitted logits."""
             tok2 = tokens[None, :]                                   # (1, Lp)
-            next_tok, mini = model.prefill(ctx, params, {"tokens": tok2}, cap=L)
+            next_tok, mini = model.prefill(
+                ctx, params, {"tokens": tok2, "n_valid": n_valid[None]}, cap=L
+            )
 
             def write(full, part):
                 # every cache leaf is (n_sb, B, ...); part has B=1 at axis 1
@@ -145,6 +196,7 @@ class InferenceEngine(_EngineBase):
             "free_cache_tokens": free * self.ecfg.max_len,
             "cache_tokens": self.ecfg.max_slots * self.ecfg.max_len,
             "waiting": len(self.waiting),
+            "compile_events": self.compile_events,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -156,12 +208,12 @@ class InferenceEngine(_EngineBase):
         for i in range(self.ecfg.max_slots):
             if self.slot_seq[i] is None and self.waiting:
                 seq = self.waiting.popleft()
-                toks = jnp.asarray(seq.prompt, jnp.int32)
+                toks, n, _ = self._pad_context(seq.prompt)
                 nxt, self.cache = self._prefill(
-                    self.params, self.cache, toks, jnp.asarray(i), jnp.asarray(len(seq.prompt))
+                    self.params, self.cache, jnp.asarray(toks), jnp.asarray(i), jnp.asarray(n)
                 )
                 self.slot_seq[i] = seq
-                self.slot_len[i] = len(seq.prompt)
+                self.slot_len[i] = n
                 self._last[i] = int(nxt)
                 seq.out.append(int(nxt))
                 if self._stop_hit(seq, int(nxt), int(self.slot_len[i])):
@@ -209,6 +261,7 @@ class PagedEngineConfig:
     max_seq_len: int = 256       # block-table width = ceil(max_seq_len / page_size)
     max_new_tokens: int = 32
     eos_id: int = -1
+    bucket_prefill: bool = True  # pad prefill to power-of-two page buckets
 
     @property
     def table_width(self) -> int:
@@ -250,6 +303,8 @@ class PagedInferenceEngine(_EngineBase):
         self.model = get_model(cfg)
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
         self._max_new, self._eos, self._len_cap = pcfg.max_new_tokens, pcfg.eos_id, pcfg.max_seq_len
+        self._bucket_unit, self._bucket_on = pcfg.page_size, pcfg.bucket_prefill
+        self._prefill_shapes = set()
         B, P = pcfg.max_slots, pcfg.table_width
         self.cache = self.model.init_paged_cache(B, pcfg.num_pages, pcfg.page_size)
         self.allocator = BlockAllocator(pcfg.num_pages, pcfg.page_size)
@@ -270,31 +325,19 @@ class PagedInferenceEngine(_EngineBase):
     def _build(self):
         model, ctx, cfg = self.model, self.ctx, self.cfg
 
-        def prefill_paged(params, cache, tokens, tab_row, slot):
-            """Prefill one sequence and scatter its K/V through the block
-            table into the page pools; per-slot (SSM) state writes densely."""
-            tok2 = tokens[None, :]                                    # (1, Lp)
-            next_tok, mini = model.prefill(ctx, params, {"tokens": tok2}, cap=tokens.shape[0])
-            out_blocks = dict(cache["blocks"])
-            for i, kind in enumerate(cfg.block_pattern):
-                key = f"l{i}_mixer"
-                if kind == "attn":
-                    pool = cache["blocks"][key]
-                    m = mini["blocks"][key]
-                    out_blocks[key] = jax.vmap(
-                        lambda pk, pv, km, vm: attn_mod.paged_write_prompt(
-                            {"k": pk, "v": pv}, km, vm, tab_row
-                        )
-                    )(pool["k"], pool["v"], m["k"], m["v"])
-                else:
-                    out_blocks[key] = jax.tree.map(
-                        lambda full, part: jax.lax.dynamic_update_slice_in_dim(
-                            full, part.astype(full.dtype), slot, axis=1
-                        ),
-                        cache["blocks"][key],
-                        mini["blocks"][key],
-                    )
-            return next_tok[0], {"blocks": out_blocks}
+        def prefill_paged(params, cache, tokens, tab_row, slot, n_valid):
+            """Prefill one bucket-padded sequence through the model's paged
+            path: attention K/V scatter through the block-table row inside
+            each layer (pads land on the null page), recurrent mixers run
+            from zero state into ``slot`` — no dense staging cache."""
+            batch = {
+                "tokens": tokens[None, :],                            # (1, Lp)
+                "n_valid": n_valid[None],
+                "tab_row": tab_row,
+                "slot": slot,
+            }
+            next_tok, cache = model.prefill_paged(ctx, params, batch, cache)
+            return next_tok[0], cache
 
         def decode_all(params, cache, last_tokens, lens, tab):
             batch = {"token": last_tokens[:, None], "lengths": lens, "block_tab": tab}
@@ -319,7 +362,7 @@ class PagedInferenceEngine(_EngineBase):
                     out_blocks[key] = jax.tree.map(copy_slot, cache["blocks"][key])
             return {"blocks": out_blocks}
 
-        self._prefill = jax.jit(prefill_paged)
+        self._prefill = jax.jit(prefill_paged, donate_argnums=(1,))
         self._decode = jax.jit(decode_all, donate_argnums=(1,))
         self._copy_fork = jax.jit(copy_fork, donate_argnums=(0,))
         self._last = np.zeros(self.pcfg.max_slots, np.int32)
@@ -339,6 +382,7 @@ class PagedInferenceEngine(_EngineBase):
             "free_cache_tokens": self.allocator.free_pages * self.pcfg.page_size,
             "cache_tokens": self.pcfg.cache_tokens,
             "waiting": len(self.waiting),
+            "compile_events": self.compile_events,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -363,21 +407,24 @@ class PagedInferenceEngine(_EngineBase):
         return None
 
     def _install(self, slot: int, seq: Sequence, table: PageTable) -> int:
-        """Prefill seq's full context through ``table`` into slot; returns
-        the emitted next token."""
+        """Prefill seq's full context (bucket-padded) through ``table`` into
+        slot; returns the emitted next token. Pad positions past the
+        allocated pages map to the null page via the padded table row."""
         ctx_toks = seq.context_tokens()
         table.num_tokens = len(ctx_toks)
         self.tables[slot] = table
         self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+        toks, n, _ = self._pad_context(ctx_toks)
         nxt, self.cache = self._prefill(
             self.params,
             self.cache,
-            jnp.asarray(ctx_toks, jnp.int32),
+            jnp.asarray(toks),
             jnp.asarray(self.block_tab[slot]),
             jnp.asarray(slot),
+            jnp.asarray(n),
         )
         self.slot_seq[slot] = seq
-        self.slot_len[slot] = len(ctx_toks)
+        self.slot_len[slot] = n
         self._last[slot] = int(nxt)
         self._stamp[slot] = self._stamp_next
         self._stamp_next += 1

@@ -37,6 +37,29 @@ from typing import Deque, Dict, List
 NULL_PAGE = 0
 
 
+def bucket_tokens(n: int, unit: int, cap: int) -> int:
+    """Length bucket for a context of ``n`` tokens: the smallest
+    power-of-two multiple of ``unit`` (the page size) holding ``n``, capped
+    at ``cap`` (``max_seq_len``). Right-padding every prefill to its bucket
+    bounds the number of distinct prefill shapes — hence XLA compilations —
+    at ``num_buckets(unit, cap)`` regardless of the traffic's length mix."""
+    m = -(-max(1, n) // unit)           # pages needed, >= 1
+    b = 1
+    while b < m:
+        b *= 2
+    return max(n, min(b * unit, cap))
+
+
+def num_buckets(unit: int, cap: int) -> int:
+    """How many distinct bucket lengths exist: ceil(log2(cap/unit)) + 1."""
+    count = 1
+    b = unit
+    while b < cap:
+        b *= 2
+        count += 1
+    return count
+
+
 class OutOfPages(Exception):
     """Raised when an allocation cannot be satisfied from the free list."""
 

@@ -16,12 +16,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.sharding.compat import shard_map_nocheck
 from repro.train.optimizer import QBLOCK
-
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array, int]:
@@ -61,8 +57,8 @@ def make_compressed_psum(mesh, axis_name: str, inner_spec):
         def body(x_l):
             return compressed_allreduce_local(x_l, axis_name)
 
-        return _shard_map(
-            body, mesh=mesh, in_specs=(inner_spec,), out_specs=inner_spec, check_vma=False
+        return shard_map_nocheck(
+            body, mesh=mesh, in_specs=(inner_spec,), out_specs=inner_spec
         )(x)
 
     return fn

@@ -126,7 +126,7 @@ def _smoke(arch):
     return cfg
 
 
-@pytest.mark.parametrize("arch", ["smollm-360m", "jamba-1.5-large-398b"])
+@pytest.mark.parametrize("arch", ["smollm-360m", "jamba-1.5-large-398b", "xlstm-350m"])
 def test_paged_engine_matches_dense_engine(arch):
     """Paged continuous batching must be a pure memory-layout change: same
     greedy tokens as the dense v1 engine (attn layers paged; recurrent
@@ -262,8 +262,10 @@ def test_engine_capacity_telemetry_moves_with_load():
 # ---------------------------------------------------------------------------
 
 
-def _router(flask_fn=None, docker_fn=None):
-    mk = lambda t, cap, fn: Backend(t, run=lambda req: "ok", capacity=cap, capacity_fn=fn)
+def _router(flask_fn=None, docker_fn=None, queue_cap=64):
+    mk = lambda t, cap, fn: Backend(
+        t, run=lambda req: "ok", capacity=cap, queue_cap=queue_cap, capacity_fn=fn
+    )
     return StraightLineRouter(
         {
             Tier.FLASK: mk(Tier.FLASK, 1, flask_fn),
@@ -312,6 +314,52 @@ def test_drain_runs_queued_work_even_when_probe_reports_zero():
     assert not r.backends[Tier.DOCKER].queue
     assert r.metrics.total == 1 and not r.metrics.failed
     assert r.results[0] == "ok"
+
+
+def test_submit_enforces_queue_cap_deflect_then_reject():
+    """Admission control: a full backlog deflects to serverless instead of
+    growing without bound; a full serverless queue rejects outright."""
+    r = _router(queue_cap=1)
+    big = lambda rid: Request(rid=rid, arrival_t=0.0, data_size=5e7)  # r_d > D
+    assert r.submit(big(0)) == Tier.DOCKER        # placed, queued
+    t1 = r.submit(big(1))
+    assert t1 == Tier.SERVERLESS                  # docker backlog full -> deflect
+    t2 = r.submit(big(2))
+    assert t2 == Tier.SERVERLESS                  # even serverless is full...
+    assert len(r.metrics.failed) == 1             # ...fast rejection, not queueing
+    assert r.metrics.failed[0].fail_reason == "queue-full"
+    assert len(r.backends[Tier.DOCKER].queue) == 1
+    assert len(r.backends[Tier.SERVERLESS].queue) == 1
+    r.drain()                                     # admitted work still completes
+    assert r.metrics.total == 3 and len(r.metrics.failed) == 1
+
+
+def test_retry_respects_serverless_queue_cap():
+    """The failure-retry path must honor queue_cap too: with serverless
+    saturated, a failing tier's request fails fast instead of growing the
+    serverless backlog without bound."""
+    from repro.core.router import StraightLineRouter
+
+    def boom(req):
+        raise RuntimeError("tier down")
+
+    mk = lambda t, run, cap: Backend(t, run=run, capacity=cap, queue_cap=1)
+    r = StraightLineRouter(
+        {
+            Tier.FLASK: mk(Tier.FLASK, boom, 1),
+            Tier.DOCKER: mk(Tier.DOCKER, boom, 4),
+            Tier.SERVERLESS: mk(Tier.SERVERLESS, lambda req: "ok", 16),
+        },
+        policy=StraightLinePolicy(Thresholds(F=1e9, D=1e6)),
+    )
+    r.backends[Tier.SERVERLESS].queue.append(
+        Request(rid=99, arrival_t=0.0, data_size=1.0)
+    )                                             # saturate the spill target
+    r.submit(Request(rid=0, arrival_t=0.0, data_size=100.0))
+    r.poll()                                      # flask run fails, cannot spill
+    assert len(r.backends[Tier.SERVERLESS].queue) <= 1
+    failed = [q for q in r.metrics.failed if q.rid == 0]
+    assert failed and failed[0].fail_reason.startswith("error:")
 
 
 def test_tiersim_free_slots_follows_capacity_probe():

@@ -1,0 +1,235 @@
+"""Bucketed pad-aware prefill: padded outputs/state match unpadded across
+attn/mamba/xlstm mixers, bucketing preserves greedy tokens end-to-end (incl.
+preemption-resume), and a sweep of distinct context lengths compiles prefill
+at most num_buckets times."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import get_model
+from repro.serving.engine import (
+    EngineConfig,
+    InferenceEngine,
+    PagedEngineConfig,
+    PagedInferenceEngine,
+)
+from repro.serving.paging import bucket_tokens, num_buckets
+
+ARCHS = ["smollm-360m", "jamba-1.5-large-398b", "xlstm-350m"]
+PROMPT = [3, 1, 4, 1, 5, 9, 2]
+
+
+def _smoke(arch):
+    cfg = get_config(arch, smoke=True).replace(attn_chunk=64)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Bucket math
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_tokens_pow2_page_multiples_capped():
+    assert bucket_tokens(1, 16, 256) == 16
+    assert bucket_tokens(16, 16, 256) == 16
+    assert bucket_tokens(17, 16, 256) == 32
+    assert bucket_tokens(33, 16, 256) == 64
+    assert bucket_tokens(200, 16, 256) == 256
+    assert bucket_tokens(90, 16, 96) == 96          # cap need not be pow2*unit
+    assert num_buckets(16, 256) == 5                # 16,32,64,128,256
+    assert num_buckets(4, 32) == 4                  # 4,8,16,32
+    # every achievable bucket for lengths 1..cap is one of num_buckets values
+    seen = {bucket_tokens(n, 4, 32) for n in range(1, 33)}
+    assert seen == {4, 8, 16, 32}
+
+
+# ---------------------------------------------------------------------------
+# Model-level parity: padded prefill == unpadded prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_padded_prefill_matches_unpadded(arch):
+    """Right-padding with n_valid must be invisible: same emitted token, same
+    recurrent state (identity pad steps), same valid-prefix KV, and identical
+    greedy continuation when decoding from either cache."""
+    cfg = _smoke(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = len(PROMPT)
+    cap = 32
+    tok_u, cache_u = model.prefill(
+        None, params, {"tokens": jnp.asarray([PROMPT], jnp.int32)}, cap=cap
+    )
+    padded = jnp.zeros((1, 16), jnp.int32).at[0, :n].set(jnp.asarray(PROMPT))
+    tok_p, cache_p = model.prefill(
+        None, params, {"tokens": padded, "n_valid": jnp.asarray([n])}, cap=cap
+    )
+    assert int(tok_u[0]) == int(tok_p[0])
+
+    for i, kind in enumerate(cfg.block_pattern):
+        cu = cache_u["blocks"][f"l{i}_mixer"]
+        cp = cache_p["blocks"][f"l{i}_mixer"]
+        if kind == "attn":
+            for leaf in ("k", "v"):
+                a = np.asarray(cu[leaf], np.float32)[:, :, :n]
+                b = np.asarray(cp[leaf], np.float32)[:, :, :n]
+                np.testing.assert_array_equal(a, b, err_msg=(arch, i, leaf))
+        else:
+            # recurrent state: pad steps must have been identity
+            for leaf in cu:
+                a = np.asarray(cu[leaf], np.float32)
+                b = np.asarray(cp[leaf], np.float32)
+                np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5, err_msg=(arch, i, leaf))
+
+    # greedy continuation from either cache stays token-for-token identical
+    lens = jnp.asarray([n], jnp.int32)
+    tu, tp, cu, cp = tok_u, tok_p, cache_u, cache_p
+    for step in range(3):
+        bu = {"token": tu[:, None], "cache_index": lens[0] + step, "lengths": lens + step}
+        bp = {"token": tp[:, None], "cache_index": lens[0] + step, "lengths": lens + step}
+        tu, cu = model.decode(None, params, cu, bu)
+        tp, cp = model.decode(None, params, cp, bp)
+        assert int(tu[0]) == int(tp[0]), (arch, step)
+
+
+def test_padded_prefill_matches_unpadded_moe_binding_capacity():
+    """With the DEFAULT (binding) capacity factor, bucket padding must not
+    inflate per-expert capacity: the dynamic capacity_for(valid tokens)
+    prefix cut keeps dropped-token behavior identical to an unpadded run."""
+    cfg = get_config("jamba-1.5-large-398b", smoke=True).replace(attn_chunk=64)
+    assert cfg.moe is not None and cfg.moe.capacity_factor < 2.0
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = len(PROMPT)
+    tok_u, _ = model.prefill(
+        None, params, {"tokens": jnp.asarray([PROMPT], jnp.int32)}, cap=32
+    )
+    padded = jnp.zeros((1, 16), jnp.int32).at[0, :n].set(jnp.asarray(PROMPT))
+    tok_p, _ = model.prefill(
+        None, params, {"tokens": padded, "n_valid": jnp.asarray([n])}, cap=32
+    )
+    assert int(tok_u[0]) == int(tok_p[0])
+
+
+def test_padded_prefill_matches_unpadded_encdec():
+    """The n_valid contract holds for enc-dec too: decoder pads are masked,
+    the emitted token comes from the last valid decoder position."""
+    cfg = get_config("whisper-large-v3", smoke=True).replace(attn_chunk=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = len(PROMPT)
+    frames = jax.random.normal(
+        jax.random.PRNGKey(1), (1, cfg.encoder.n_ctx, cfg.d_model), cfg.compute_dtype
+    )
+    tok_u, _ = model.prefill(
+        None, params, {"tokens": jnp.asarray([PROMPT], jnp.int32), "frames": frames}, cap=32
+    )
+    padded = jnp.zeros((1, 16), jnp.int32).at[0, :n].set(jnp.asarray(PROMPT))
+    tok_p, _ = model.prefill(
+        None, params,
+        {"tokens": padded, "frames": frames, "n_valid": jnp.asarray([n])}, cap=32,
+    )
+    assert int(tok_u[0]) == int(tok_p[0])
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: bucketing on == bucketing off
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[1, 2, 3, 4], [5, 6, 7], [9, 10, 11, 12, 13], [2, 4]]
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "xlstm-350m"])
+def test_dense_engine_bucketing_token_parity(arch):
+    cfg = _smoke(arch)
+    off = InferenceEngine(
+        cfg, EngineConfig(max_slots=2, max_len=64, max_new_tokens=4, bucket_prefill=False)
+    )
+    a = off.generate(PROMPTS)
+    on = InferenceEngine(
+        cfg,
+        EngineConfig(max_slots=2, max_len=64, max_new_tokens=4, bucket_unit=8),
+        params=off.params,
+    )
+    b = on.generate(PROMPTS)
+    assert [s.out for s in a] == [s.out for s in b]
+    assert on.compile_events <= num_buckets(8, 64)
+
+
+def test_paged_engine_bucketing_token_parity_with_preemption():
+    """Bucketed paged prefill must reproduce unbucketed tokens exactly, even
+    when page exhaustion forces preemption-resume (resume contexts hit
+    different buckets than the original prompts)."""
+    cfg = _smoke("smollm-360m")
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12], [2, 4, 6, 1]]
+    pc = dict(page_size=4, num_pages=10, max_slots=4, max_seq_len=32, max_new_tokens=8)
+    off = PagedInferenceEngine(cfg, PagedEngineConfig(bucket_prefill=False, **pc))
+    a = off.generate(prompts)
+    on = PagedInferenceEngine(cfg, PagedEngineConfig(**pc), params=off.params)
+    b = on.generate(prompts)
+    assert on.preemptions > 0                      # resume path exercised
+    assert [s.out for s in a] == [s.out for s in b]
+    on.allocator.check_invariants()
+    assert on.allocator.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Compile-count regression: O(#buckets), not O(#lengths)
+# ---------------------------------------------------------------------------
+
+
+def _sweep(eng, lengths, vocab):
+    for L in lengths:
+        eng.submit([1 + (i % (vocab - 1)) for i in range(L)])
+    eng.generate([])
+
+
+def test_prefill_compilations_bounded_by_buckets():
+    """>= 16 distinct context lengths on each engine must compile prefill at
+    most ceil(log2(cap/unit)) + 1 times (the acceptance bound)."""
+    cfg = _smoke("smollm-360m")
+    lengths = list(range(1, 17))                   # 16 distinct lengths
+    bound = num_buckets(4, 32)                     # 4, 8, 16, 32 -> 4
+    assert bound == 4
+
+    paged = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=4, num_pages=33, max_slots=2, max_seq_len=32,
+                          max_new_tokens=1),
+    )
+    _sweep(paged, lengths, cfg.vocab_size)
+    dense = InferenceEngine(
+        cfg,
+        EngineConfig(max_slots=2, max_len=32, max_new_tokens=1, bucket_unit=4),
+        params=paged.params,
+    )
+    _sweep(dense, lengths, cfg.vocab_size)
+
+    for eng in (paged, dense):
+        assert eng.compile_events <= bound, eng._prefill_shapes
+        assert eng._prefill_shapes <= {4, 8, 16, 32}
+        assert eng.capacity_now()["compile_events"] == eng.compile_events
+        # cross-check against the actual jit cache when this JAX exposes it
+        cache_size = getattr(eng._prefill, "_cache_size", None)
+        if cache_size is not None:
+            assert cache_size() <= bound
+
+
+def test_unbucketed_engine_compiles_per_length():
+    """Control: with bucketing off the tracked shape count grows with every
+    distinct length — the churn this refactor exists to remove."""
+    cfg = _smoke("smollm-360m")
+    eng = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=4, num_pages=33, max_slots=2, max_seq_len=32,
+                          max_new_tokens=1, bucket_prefill=False),
+    )
+    _sweep(eng, [3, 5, 9, 11], cfg.vocab_size)
+    assert eng.compile_events == 4
