@@ -1,0 +1,108 @@
+"""Concurrent router runtime vs the serial poll loop.
+
+The serial loop runs backends synchronously inside ``poll()``: every
+request's service time is paid on the one dispatching thread, so tier
+throughput is 1/service_time regardless of how much concurrency the tiers
+could absorb. The worker-pool runtime overlaps service across min(workers,
+capacity) threads per tier — I/O-bound backends (network hops to Flask /
+Docker / Lambda in the paper's testbed, modelled here as sleeps) scale
+nearly linearly until capacity binds.
+
+Measures end-to-end throughput and p99 response time for the same workload
+through the serial loop and through pools of 1 / 4 / 16 workers per tier,
+at equal (zero) failure rate.
+
+    PYTHONPATH=src:. python benchmarks/router_concurrency.py
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+
+N_REQ = 160
+SERVICE_S = 0.004          # per-request service time (I/O-bound sleep)
+CAPACITY = {0: 16, 1: 16, 2: 64}   # FLASK, DOCKER, SERVERLESS
+
+
+def build_router():
+    from repro.core import StraightLinePolicy, Thresholds, Tier
+    from repro.core.router import Backend, StraightLineRouter
+
+    def mk(name):
+        def run(req):
+            time.sleep(SERVICE_S)
+            return f"{name}:{req.rid}"
+        return run
+
+    return StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, mk("f"), capacity=CAPACITY[0], queue_cap=N_REQ),
+            Tier.DOCKER: Backend(Tier.DOCKER, mk("d"), capacity=CAPACITY[1], queue_cap=N_REQ),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, mk("s"), capacity=CAPACITY[2], queue_cap=N_REQ),
+        },
+        policy=StraightLinePolicy(Thresholds(F=1e9, D=1e6)),
+        results_cap=N_REQ,
+    )
+
+
+def run_once(workers: int) -> dict:
+    """workers=0: serial poll loop; else the concurrent runtime."""
+    from repro.core.request import Request
+    from repro.core.telemetry import percentile
+
+    router = build_router()
+    if workers > 0:
+        router.start(workers)
+    t0 = time.perf_counter()
+    for i in range(N_REQ):
+        router.submit(Request(rid=i, arrival_t=0.0, data_size=100.0, timeout_s=300.0))
+    router.drain()
+    wall = time.perf_counter() - t0
+    if workers > 0:
+        router.stop()
+    m = router.metrics
+    rts = m.response_times()
+    return {
+        "wall_s": wall,
+        "throughput_rps": m.total / wall,
+        "p99_response_s": percentile(rts, 99),
+        "failure_rate": m.failure_rate,
+        "total": m.total,
+    }
+
+
+def main() -> None:
+    results = {}
+    for workers in (0, 1, 4, 16):
+        r = run_once(workers)
+        results[workers] = r
+        name = "serial" if workers == 0 else f"workers{workers}"
+        emit(
+            f"router_concurrency.{name}",
+            r["wall_s"] / r["total"] * 1e6,
+            f"thr={r['throughput_rps']:.0f}rps;p99={r['p99_response_s']*1e3:.1f}ms;"
+            f"fail={r['failure_rate']:.3f}",
+        )
+
+    base = results[0]
+    speedup4 = results[4]["throughput_rps"] / base["throughput_rps"]
+    speedup16 = results[16]["throughput_rps"] / base["throughput_rps"]
+    emit("router_concurrency.speedup", 0.0,
+         f"workers4_vs_serial={speedup4:.1f}x;workers16_vs_serial={speedup16:.1f}x")
+    print(
+        f"\n{N_REQ} requests, {SERVICE_S*1e3:.0f}ms service: serial "
+        f"{base['throughput_rps']:.0f} rps -> 4 workers "
+        f"{results[4]['throughput_rps']:.0f} rps ({speedup4:.1f}x), 16 workers "
+        f"{results[16]['throughput_rps']:.0f} rps ({speedup16:.1f}x)"
+    )
+    assert all(r["total"] == N_REQ for r in results.values()), "lost requests"
+    assert all(r["failure_rate"] == base["failure_rate"] for r in results.values()), (
+        "failure rates diverge — speedup not at equal failure rate"
+    )
+    assert speedup4 >= 2.0, f"4 workers should give >=2x over the serial loop, got {speedup4:.1f}x"
+    print("OK — >=2x throughput at 4 workers/tier, equal failure rate, p99 down")
+
+
+if __name__ == "__main__":
+    main()

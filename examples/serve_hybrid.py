@@ -36,14 +36,22 @@ batch_tier = PagedInferenceEngine(
                            max_seq_len=MAXLEN, max_new_tokens=NEW),
     params=interactive.params,
 )
-print(f"warm tiers ready in {time.time()-t0:.1f}s")
+print(f"tiers ready in {time.time()-t0:.1f}s")
+
+# pre-warm: compile every prefill bucket before traffic arrives, so no
+# request pays an XLA compile and the placer sees fully-warm tiers
+for eng in (interactive, batch_tier):
+    eng.prewarm()
 print(f"batch tier: {batch_tier.capacity_now()}")
 
 # live capacity feedback: the placer sees each engine's measured admission
-# capacity (slots bounded by free pages), not a hardcoded constant
+# capacity (slots bounded by free pages), not a hardcoded constant — and
+# warm-up state (compile_events/total_buckets) through the stats probes
 gauge = CapacityGauge()
 gauge.register("flask", lambda: interactive.admission_capacity(PROMPT + NEW))
 gauge.register("docker", lambda: batch_tier.admission_capacity(PROMPT + NEW))
+gauge.register_stats("flask", interactive.capacity_now)
+gauge.register_stats("docker", batch_tier.capacity_now)
 
 elastic_pool = []
 
@@ -74,9 +82,11 @@ def elastic_run(req: Request):
 router = StraightLineRouter(
     {
         Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8,
-                            capacity_fn=lambda: gauge.free("flask")),
+                            capacity_fn=lambda: gauge.free("flask"),
+                            stats_fn=lambda: gauge.stats("flask")),
         Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64,
-                             capacity_fn=lambda: gauge.free("docker")),
+                             capacity_fn=lambda: gauge.free("docker"),
+                             stats_fn=lambda: gauge.stats("docker")),
         Tier.SERVERLESS: Backend(Tier.SERVERLESS, elastic_run, capacity=16),
     },
     policy=StraightLinePolicy(Thresholds(F=10, D=4096)),   # scaled-down thresholds

@@ -7,7 +7,16 @@ cd "$(dirname "$0")/.."
 python -m pip install -q --retries 1 --timeout 5 -r requirements-dev.txt \
     || echo "ci.sh: pip install failed (offline?); continuing with preinstalled deps" >&2
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# Hung-lock detection: the concurrency soak (tests/test_router_concurrency.py)
+# must fail fast on a deadlock, not wedge CI. pytest-timeout's thread method
+# fires even when worker threads are stuck on a lock; degrade gracefully when
+# the plugin could not be installed (offline image).
+TIMEOUT_ARGS=()
+if python -c "import pytest_timeout" 2>/dev/null; then
+    TIMEOUT_ARGS=(--timeout=300 --timeout-method=thread)
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q ${TIMEOUT_ARGS[@]+"${TIMEOUT_ARGS[@]}"} "$@"
 
 # Model-config smoke subset (forward + grad + prefill/decode per family) so
 # the script the ROADMAP names is actually exercised in CI; the grad leg

@@ -15,7 +15,7 @@ from repro.core.placing import (
 )
 from repro.core.request import PlacementDecision, Request, Tier
 from repro.core.simulator import SimConfig, Simulation
-from repro.core.telemetry import CapacityGauge, FrequencyEstimator, Metrics
+from repro.core.telemetry import CapacityGauge, FrequencyEstimator, Metrics, warm_fraction
 from repro.core.tiers import TierConfig, TierSim
 
 __all__ = [
@@ -37,4 +37,5 @@ __all__ = [
     "TierConfig",
     "TierSim",
     "placing_batch_jax",
+    "warm_fraction",
 ]

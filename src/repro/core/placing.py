@@ -15,8 +15,9 @@ Variants (paper §IV future work, implemented here as beyond-paper features):
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,34 +31,102 @@ class Thresholds:
     D: float = 1.0e6    # bytes — payloads above this go to the batch tier
 
 
+def takes_warmup(policy) -> bool:
+    """Whether ``policy.place`` accepts the ``warmup`` kwarg. Only policies
+    that *consume* warm-up state declare it (StraightLinePolicy); the
+    warmup-blind ones keep the 4-arg signature so ``place_compat`` skips
+    the stats probes entirely for them."""
+    try:
+        return "warmup" in inspect.signature(policy.place).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def place_compat(
+    policy,
+    req: Request,
+    f_t: float,
+    flask_free: int,
+    docker_free: int,
+    warmup_fn: Callable[[], Optional[dict]],
+    warmup_capable: bool,
+) -> PlacementDecision:
+    """The one placement call site shared by the router and the simulator:
+    passes warm-up state only when the policy accepts it (``warmup_capable``
+    is the cached ``takes_warmup(policy)``), evaluating ``warmup_fn`` lazily
+    so warmup-blind policies never pay for stats probes."""
+    if warmup_capable:
+        return policy.place(req, f_t, flask_free, docker_free, warmup=warmup_fn())
+    return policy.place(req, f_t, flask_free, docker_free)
+
+
+def _warm(warmup: Optional[dict], tier: Tier) -> float:
+    """Warm-up fraction for a tier; tiers without warm-up state (static
+    backends, no probe) are treated as fully warm."""
+    if warmup is None:
+        return 1.0
+    v = warmup.get(tier)
+    return 1.0 if v is None else float(v)
+
+
 class StraightLinePolicy:
-    """Algorithm 1, line-for-line."""
+    """Algorithm 1, line-for-line — plus warm-up-aware availability.
+
+    ``warmup`` (optional) maps tiers to their bucket-compilation progress in
+    [0, 1] (``compile_events / total_buckets`` from ``capacity_now()``).
+    While a tier is still compiling its prefill buckets, a request routed
+    there may hit an XLA compile instead of a warm kernel; when both
+    interactive and batch tiers are available, the policy therefore prefers
+    the *warmer* one. The faithful lines 3/6 (burst and large-payload) and
+    the fall-through order are untouched; with ``warmup=None`` the decision
+    is byte-identical to the paper's Algorithm 1."""
 
     name = "straightline"
 
     def __init__(self, thresholds: Thresholds = Thresholds()):
         self.th = thresholds
 
-    def place(self, req: Request, f_t: float, flask_free: int, docker_free: int) -> PlacementDecision:
+    def place(
+        self,
+        req: Request,
+        f_t: float,
+        flask_free: int,
+        docker_free: int,
+        warmup: Optional[dict] = None,
+    ) -> PlacementDecision:
         th = self.th
         if f_t > th.F and req.data_size < th.D:                      # line 3
             return PlacementDecision(req.rid, Tier.SERVERLESS, "f_t>F and r_d<D")
         if req.data_size > th.D:                                     # line 6
             return PlacementDecision(req.rid, Tier.DOCKER, "r_d>D")
         if flask_free > 0:                                           # line 10
+            wf, wd = _warm(warmup, Tier.FLASK), _warm(warmup, Tier.DOCKER)
+            if docker_free > 0 and wd > wf:
+                # both available but flask is still compiling its buckets:
+                # route to the warmer batch tier until flask catches up
+                return PlacementDecision(
+                    req.rid, Tier.DOCKER, f"S_F cold (warm {wf:.2f}<{wd:.2f}), S_D warmer"
+                )
             return PlacementDecision(req.rid, Tier.FLASK, "S_F non-empty")
         if docker_free > 0:                                          # line 14
             return PlacementDecision(req.rid, Tier.DOCKER, "S_F empty, S_D non-empty")
         return PlacementDecision(req.rid, Tier.SERVERLESS, "all busy")  # line 18
 
-    def place_all(self, reqs: Sequence[Request], f_t: float, flask_free: int, docker_free: int):
+    def place_all(
+        self,
+        reqs: Sequence[Request],
+        f_t: float,
+        flask_free: int,
+        docker_free: int,
+        warmup: Optional[dict] = None,
+    ):
         """Paper's batch form: place a waiting queue R, consuming availability.
         Every docker placement consumes docker availability — including the
         unconditional large-payload path — keyed on the decision tier."""
         out: List[PlacementDecision] = []
         ff, df = flask_free, docker_free
         for r in reqs:
-            d = self.place(r, f_t, ff, df)
+            d = self.place(r, f_t, ff, df, warmup=warmup)
             if d.tier == Tier.FLASK:
                 ff -= 1
             elif d.tier == Tier.DOCKER:

@@ -1,24 +1,58 @@
-"""Online StraightLine router — fronts *real* execution backends.
+"""Online StraightLine router — concurrent runtime fronting *real* backends.
 
 The simulator (simulator.py) validates policies at scale; this router runs
 the same Algorithm-1 logic against live backends (e.g. the JAX serving
-engine or the Xception classifier in examples/). Single-threaded event-loop
-style: callers submit requests, ``poll()`` drains whatever is due.
+engine or the Xception classifier in examples/). Two execution modes share
+one placement/accounting core:
 
-Fault tolerance: per-request deadline, retry-once on a different tier,
-hedging for stragglers (duplicate to the elastic tier past the hedge
-deadline — first result wins).
+* **Concurrent runtime** (``start(workers_per_tier)``): per-tier worker
+  pools pull from the deque queues, ``Backend`` accounting is lock-guarded,
+  and completion is futures-based — callers block on ``result(rid,
+  timeout)``. Hedging is *real*: past the hedge deadline a duplicate of the
+  request races the original on the elastic tier; the first finisher wins,
+  the loser's result is discarded, and the request's metrics are recorded
+  exactly once. ``stop()`` joins the pools.
+
+* **Serial fallback** (``poll()`` / ``drain()`` without ``start()``): the
+  original single-threaded event loop, kept as the benchmark baseline
+  (benchmarks/router_concurrency.py) and for deterministic fake-clock
+  tests. Serial hedging *moves* a straggler to the elastic tier instead of
+  racing a duplicate (there is no parallelism to race with).
+
+Thread-safety contract: ``submit``/``result``/``drain`` may be called from
+any number of threads. Placement reads (``Backend.free()``, warm-up stats)
+are instantaneous snapshots — two concurrent submits may both see the same
+free slot; the bounded queues absorb the race. Lock order: a backend
+condition may be taken while holding nothing; the router registry lock
+(``_lock``) is innermost and never held across a backend run or an engine
+call.
+
+Fault tolerance: per-request deadline, retry-once on a different tier on
+error, hedging for stragglers. Completed results are popped on retrieval
+and evicted past ``results_cap`` so a long-running router cannot grow its
+result map without bound.
 """
 from __future__ import annotations
 
+import copy
+import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
-from repro.core.placing import StraightLinePolicy
+from repro.core.placing import StraightLinePolicy, place_compat, takes_warmup
 from repro.core.request import Request, Tier
-from repro.core.telemetry import FrequencyEstimator, Metrics
+from repro.core.telemetry import FrequencyEstimator, Metrics, warm_fraction
+
+
+class RequestFailed(RuntimeError):
+    """Raised by ``result()`` when the request finished in failure."""
+
+    def __init__(self, rid: int, reason: str):
+        super().__init__(f"request {rid} failed: {reason}")
+        self.rid = rid
+        self.reason = reason
 
 
 @dataclass
@@ -28,6 +62,9 @@ class Backend:
     ``capacity_fn`` is an optional live probe (e.g. the paged engine's
     ``admission_capacity``): when set, the placer sees the tier's measured
     free capacity instead of the static ``capacity`` constant.
+    ``stats_fn`` is an optional richer snapshot (``engine.capacity_now``)
+    from which the router derives warm-up state (compile_events vs
+    total_buckets) for warm-up-aware placement.
     """
 
     tier: Tier
@@ -37,6 +74,13 @@ class Backend:
     inflight: int = 0
     queue: Deque[Request] = field(default_factory=deque)
     capacity_fn: Optional[Callable[[], int]] = None
+    stats_fn: Optional[Callable[[], dict]] = None
+
+    def __post_init__(self):
+        # cond shares the lock: enqueue/dequeue and inflight accounting are
+        # guarded together, and workers sleep on the same primitive
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
 
     def free(self) -> int:
         """Free capacity for Algorithm 1's availability check. A live probe
@@ -53,6 +97,49 @@ class Backend:
                 return max(0, int(live))
         return max(0, self.capacity - self.inflight)
 
+    def warmth(self) -> Optional[float]:
+        """Bucket-compilation progress in [0, 1] from ``stats_fn``, or None
+        when the backend exports no warm-up state (static tiers are treated
+        as always warm by the policy)."""
+        if self.stats_fn is None:
+            return None
+        return warm_fraction(self.stats_fn())
+
+    def try_push(self, req: Request) -> bool:
+        """Enqueue within queue_cap (atomically) and wake a worker."""
+        with self.cond:
+            if len(self.queue) >= self.queue_cap:
+                return False
+            self.queue.append(req)
+            self.cond.notify()
+        return True
+
+
+class _Completion:
+    """Per-rid completion record: the future the caller waits on, plus the
+    bookkeeping that makes hedged execution exactly-once. ``live`` is the
+    number of in-flight copies of the request (1, or 2 once a hedge fires)
+    and is decremented on EVERY per-copy terminal path — win, recorded
+    failure, absorbed failure, discarded loser. A success wins immediately;
+    a failure only records once the last live copy has failed. A record may
+    be evicted/reaped only at ``live == 0`` — earlier, a still-running copy
+    could resurrect the rid and record its metrics twice. ``pending``
+    stashes a failure absorbed while a sibling copy was believed live, so
+    it can still become the rid's outcome if that sibling evaporates (a
+    hedge whose enqueue ultimately fails)."""
+
+    __slots__ = ("request", "event", "value", "failure", "done", "live", "retrieved", "pending")
+
+    def __init__(self, request: Optional[Request] = None):
+        self.request = request
+        self.event = threading.Event()
+        self.value: object = None
+        self.failure: Optional[str] = None
+        self.done = False
+        self.live = 1
+        self.retrieved = False
+        self.pending: Optional[tuple] = None   # (req, failure) absorbed, unrecorded
+
 
 class StraightLineRouter:
     def __init__(
@@ -63,6 +150,7 @@ class StraightLineRouter:
         clock: Callable[[], float] = time.monotonic,
         hedge_after_s: Optional[float] = None,
         retry_on_failure: bool = True,
+        results_cap: int = 1024,
     ):
         self.backends = backends
         self.policy = policy or StraightLinePolicy()
@@ -71,81 +159,333 @@ class StraightLineRouter:
         self.metrics = Metrics()
         self.hedge_after_s = hedge_after_s
         self.retry_on_failure = retry_on_failure
-        self.results: Dict[int, object] = {}
+        self.results_cap = results_cap
+        self.results: "OrderedDict[int, object]" = OrderedDict()
+        self._lock = threading.Lock()          # guards freq, results, _completions
+        self._completions: Dict[int, _Completion] = {}
+        self._done_order: Deque[int] = deque()  # completed rids, oldest first
+        self._threads: List[threading.Thread] = []
+        self._stop_flag = False
+        self._policy_takes_warmup = takes_warmup(self.policy)
 
+    # -- lifecycle (concurrent runtime) --------------------------------------
+    @property
+    def running(self) -> bool:
+        return bool(self._threads)
+
+    def start(self, workers_per_tier: int = 4) -> "StraightLineRouter":
+        """Launch the worker pools: per tier, min(workers_per_tier, capacity)
+        threads (capacity is the tier's concurrent-acceptance limit — more
+        workers than capacity would not add admissible parallelism). When
+        hedging is enabled a monitor thread fires duplicates for stragglers."""
+        if self._threads:
+            raise RuntimeError("router already started")
+        self._stop_flag = False
+        for b in self.backends.values():
+            n = max(1, min(workers_per_tier, b.capacity))
+            for i in range(n):
+                t = threading.Thread(
+                    target=self._worker, args=(b,), daemon=True,
+                    name=f"router-{b.tier.name.lower()}-{i}",
+                )
+                t.start()
+                self._threads.append(t)
+        if self.hedge_after_s is not None:
+            t = threading.Thread(target=self._hedge_monitor, daemon=True, name="router-hedge")
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self) -> None:
+        """Stop the pools; queued-but-unstarted work stays queued."""
+        self._stop_flag = True
+        for b in self.backends.values():
+            with b.cond:
+                b.cond.notify_all()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def __enter__(self) -> "StraightLineRouter":
+        if not self._threads:
+            self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- placement ------------------------------------------------------------
     def _free(self, t: Tier) -> int:
         return self.backends[t].free()
+
+    def _warmup_snapshot(self) -> Optional[Dict[Tier, float]]:
+        """Per-tier warm-up fractions for warm-up-aware placement; None when
+        no backend exports warm-up state (keeps Algorithm 1 byte-faithful)."""
+        snap = {
+            t: w
+            for t, b in self.backends.items()
+            if b.stats_fn is not None and (w := b.warmth()) is not None
+        }
+        return snap or None
 
     def submit(self, req: Request) -> Tier:
         now = self.clock()
         req.arrival_t = now
-        self.freq.observe(now)
-        f_t = self.freq.frequency(now)
-        d = self.policy.place(req, f_t, self._free(Tier.FLASK), self._free(Tier.DOCKER))
+        with self._lock:
+            self.freq.observe(now)
+            f_t = self.freq.frequency(now)
+        d = place_compat(
+            self.policy,
+            req,
+            f_t,
+            self._free(Tier.FLASK),
+            self._free(Tier.DOCKER),
+            self._warmup_snapshot,
+            self._policy_takes_warmup,
+        )
         tier = d.tier
-        # Admission control (queue_cap): a full backlog deflects to the
-        # elastic serverless tier instead of growing without bound; if even
-        # serverless is saturated the request is rejected outright — a fast
-        # failure the client can retry, not an unbounded queueing delay.
-        b = self.backends[tier]
-        if (
-            tier != Tier.SERVERLESS
-            and len(b.queue) >= b.queue_cap
-            and Tier.SERVERLESS in self.backends
-        ):
-            tier = Tier.SERVERLESS
-            b = self.backends[tier]
+        # Registration happens after the fallible placement/probe calls (a
+        # raising probe must not leak a forever-pending completion) but
+        # before the enqueue, so a worker can never finish a request the
+        # registry has not seen.
+        with self._lock:
+            self._completions[req.rid] = _Completion(req)
+        # Admission control (queue_cap): the enqueue is atomic (try_push),
+        # so a full backlog — whether seen up front or raced in by another
+        # submitter — deflects to the elastic serverless tier instead of
+        # growing without bound; if even serverless refuses, the request is
+        # rejected outright — a fast failure the client can retry, not an
+        # unbounded queueing delay.
         req.tier = tier
-        if len(b.queue) >= b.queue_cap:
-            self._fail(req, "queue-full")
+        if self.backends[tier].try_push(req):
             return tier
-        b.queue.append(req)
-        return tier
+        sls = self.backends.get(Tier.SERVERLESS)
+        if tier != Tier.SERVERLESS and sls is not None:
+            req.tier = Tier.SERVERLESS
+            if sls.try_push(req):
+                return Tier.SERVERLESS
+        self._fail(req, "queue-full")
+        return req.tier
 
+    # -- completion registry (exactly-once) -----------------------------------
+    def _completion_for(self, req: Request) -> _Completion:
+        """Look up (or lazily create, for requests injected straight into a
+        backend queue without submit()) the rid's completion record."""
+        with self._lock:
+            c = self._completions.get(req.rid)
+            if c is None:
+                c = _Completion(req)
+                self._completions[req.rid] = c
+            return c
+
+    def _settle(self, c: _Completion, req: Request, value: object, failure: Optional[str]) -> bool:
+        """One copy of the request reached a terminal state. Record the
+        rid's outcome exactly once; returns False when this copy lost the
+        race (result discarded, no metrics)."""
+        with self._lock:
+            c.live -= 1
+            if c.done:
+                return False           # a sibling copy already won
+            if failure is not None and c.live > 0:
+                # stash it: if the believed-live sibling never materializes
+                # (hedge enqueue fails), this failure must still settle the rid
+                c.pending = (req, failure)
+                return False           # a hedged copy is still in flight
+            c.done = True
+            c.value = value
+            c.failure = failure
+            if failure is None:
+                self.results[req.rid] = value
+            self._done_order.append(req.rid)
+            self._evict_locked()
+        self.metrics.record(req)
+        c.event.set()
+        return True
+
+    def _evict_locked(self) -> None:
+        """Bound results + completion-registry growth (caller holds _lock).
+        A record whose rid still has a live copy is rotated to the back
+        instead of reaped — reaping it would let the copy resurrect the rid
+        via _completion_for and record its metrics a second time."""
+        excess = len(self._done_order) - self.results_cap
+        spins = len(self._done_order)
+        while excess > 0 and spins > 0:
+            spins -= 1
+            old = self._done_order.popleft()
+            c = self._completions.get(old)
+            if c is not None and c.live > 0:
+                self._done_order.append(old)
+                continue
+            self.results.pop(old, None)
+            self._completions.pop(old, None)
+            excess -= 1
+
+    def _complete(self, req: Request, out: object) -> bool:
+        return self._settle(self._completion_for(req), req, out, None)
+
+    def _fail(self, req: Request, reason: str) -> None:
+        req.failed = True
+        req.fail_reason = reason
+        req.finish_t = self.clock()
+        self._settle(self._completion_for(req), req, None, reason)
+
+    def result(self, rid: int, timeout: Optional[float] = None) -> object:
+        """Block until ``rid`` finishes and return its result, popping it
+        from the result map (a second call raises KeyError). Raises
+        ``RequestFailed`` if the request failed, ``TimeoutError`` if it does
+        not finish within ``timeout`` seconds."""
+        with self._lock:
+            c = self._completions.get(rid)
+            if c is None or c.retrieved:
+                raise KeyError(f"unknown or already-retrieved rid {rid}")
+        if not c.event.wait(timeout):
+            raise TimeoutError(f"request {rid} not finished within {timeout}s")
+        with self._lock:
+            if c.retrieved:                # raced another retriever of this rid
+                raise KeyError(f"unknown or already-retrieved rid {rid}")
+            c.retrieved = True
+            self.results.pop(rid, None)
+            if c.live == 0:            # all copies terminal: reap eagerly
+                self._completions.pop(rid, None)
+                try:
+                    self._done_order.remove(rid)
+                except ValueError:
+                    pass
+            # else: a losing copy is still running — leave the record for
+            # the eviction pass to reap once it goes quiet
+        if c.failure is not None:
+            raise RequestFailed(rid, c.failure)
+        return c.value
+
+    # -- execution ------------------------------------------------------------
     def _spill_to_serverless(self, req: Request) -> bool:
         """Move a retried/hedged request to the serverless queue — but only
         within its queue_cap; admission control must hold on every enqueue
         path, not just submit(), or a flapping tier grows it without bound."""
         b = self.backends.get(Tier.SERVERLESS)
-        if b is None or len(b.queue) >= b.queue_cap:
+        if b is None:
             return False
+        prev_tier = req.tier
         req.hedged = True
-        b.queue.append(req)
-        return True
+        req.tier = Tier.SERVERLESS     # metrics must attribute the execution here
+        if b.try_push(req):
+            return True
+        req.hedged = False             # spill refused: keep the request retryable
+        req.tier = prev_tier
+        return False
 
-    def _run_one(self, b: Backend, req: Request) -> None:
+    def _execute(self, b: Backend, req: Request) -> None:
+        """Run one dequeued request to a terminal state (or hand it to the
+        retry path). Called with no locks held."""
+        c = self._completion_for(req)
+        if c.done:
+            with self._lock:
+                c.live -= 1            # hedge race already won — discard copy
+            return
         now = self.clock()
         if now - req.arrival_t > req.timeout_s:
             self._fail(req, "timeout-in-queue")
             return
-        b.inflight += 1
         req.start_t = now
         try:
             out = b.run(req)
-            req.finish_t = self.clock()
-            if req.finish_t - req.arrival_t > req.timeout_s:
-                self._fail(req, "timeout")
-            else:
-                self.results[req.rid] = out
-                self.metrics.record(req)
         except Exception as e:  # tier failure
             retryable = (
                 self.retry_on_failure and not req.hedged and req.tier != Tier.SERVERLESS
             )
             if not (retryable and self._spill_to_serverless(req)):
                 self._fail(req, f"error:{type(e).__name__}")
-        finally:
-            b.inflight -= 1
-
-    def _fail(self, req: Request, reason: str) -> None:
-        req.failed = True
-        req.fail_reason = reason
+            return
         req.finish_t = self.clock()
-        self.metrics.record(req)
+        if req.finish_t - req.arrival_t > req.timeout_s:
+            self._fail(req, "timeout")
+        else:
+            self._complete(req, out)
 
+    def _worker(self, b: Backend) -> None:
+        """Worker-pool loop: block for queued work, execute outside the lock."""
+        while True:
+            with b.cond:
+                while not b.queue and not self._stop_flag:
+                    b.cond.wait(0.1)
+                if self._stop_flag:
+                    return                 # prompt shutdown: queued work stays queued
+                req = b.queue.popleft()
+                b.inflight += 1
+            try:
+                self._execute(b, req)
+            finally:
+                with b.cond:
+                    b.inflight -= 1
+
+    # -- hedging (concurrent runtime) -----------------------------------------
+    def _fire_hedge(self, req: Request) -> None:
+        """Race a duplicate of a straggler on the elastic tier. The copy
+        shares the rid (and therefore the completion record): first finisher
+        wins, the loser is discarded by the done-check in _settle/_execute."""
+        b = self.backends.get(Tier.SERVERLESS)
+        if b is None:
+            return
+        with self._lock:
+            c = self._completions.get(req.rid)
+            if c is None or c.done or req.hedged:
+                return
+            req.hedged = True          # never hedge the same request twice
+            c.live += 1
+        clone = copy.copy(req)
+        clone.hedged = True
+        clone.tier = Tier.SERVERLESS
+        if not b.try_push(clone):
+            # hedge target saturated — no duplicate. req.hedged stays True:
+            # a request gets one hedge opportunity, not a retry loop that
+            # hammers a saturated elastic tier every monitor tick.
+            with self._lock:
+                c.live -= 1
+                orphan = self._adopt_pending_locked(c)
+            if orphan is not None:
+                # the original failed inside the live+=1/try_push window and
+                # was absorbed against this never-enqueued duplicate — its
+                # failure is the rid's outcome, settled here exactly once
+                self.metrics.record(orphan)
+                c.event.set()
+
+    def _adopt_pending_locked(self, c: _Completion) -> Optional[Request]:
+        """Caller holds _lock. If every copy is gone, nothing won, and a
+        failure was absorbed on the promise of a live sibling, promote that
+        failure to the rid's outcome; returns the request to record."""
+        if c.done or c.live > 0 or c.pending is None:
+            return None
+        req, failure = c.pending
+        c.done = True
+        c.failure = failure
+        self._done_order.append(req.rid)
+        self._evict_locked()
+        return req
+
+    def _hedge_monitor(self) -> None:
+        assert self.hedge_after_s is not None
+        tick = min(max(self.hedge_after_s / 4.0, 0.001), 0.05)
+        while not self._stop_flag:
+            time.sleep(tick)
+            now = self.clock()
+            with self._lock:
+                stale = [
+                    c.request
+                    for c in self._completions.values()
+                    if not c.done
+                    and c.request is not None
+                    and not c.request.hedged
+                    and c.request.tier not in (None, Tier.SERVERLESS)
+                    and now - c.request.arrival_t > self.hedge_after_s
+                ]
+            for req in stale:
+                self._fire_hedge(req)
+
+    # -- serial fallback (benchmark baseline) ----------------------------------
     def poll(self) -> int:
-        """Drain one waiting request per tier (round-robin-ish); returns the
-        number executed."""
+        """Serial mode only: drain one waiting request per tier (round-robin
+        -ish); returns the number executed. The concurrent runtime's worker
+        pools replace this loop — do not mix the two."""
         ran = 0
         for b in self.backends.values():
             # dispatch paces on the static concurrency limit, NOT the live
@@ -164,11 +504,30 @@ class StraightLineRouter:
                     and self._spill_to_serverless(req)
                 ):
                     continue
-                self._run_one(b, req)
+                b.inflight += 1
+                try:
+                    self._execute(b, req)
+                finally:
+                    b.inflight -= 1
                 ran += 1
         return ran
 
-    def drain(self) -> None:
-        while any(b.queue for b in self.backends.values()):
-            if self.poll() == 0:
-                break
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request reaches a terminal state.
+        Serial mode runs the poll loop; the concurrent runtime waits on the
+        outstanding completion futures."""
+        if not self._threads:
+            while any(b.queue for b in self.backends.values()):
+                if self.poll() == 0:
+                    break
+            return
+        deadline = None if timeout is None else self.clock() + timeout
+        while True:
+            with self._lock:
+                pending = [c for c in self._completions.values() if not c.done]
+            if not pending:
+                return
+            for c in pending:
+                left = None if deadline is None else max(0.0, deadline - self.clock())
+                if not c.event.wait(left):
+                    raise TimeoutError(f"drain: request still pending after {timeout}s")

@@ -18,7 +18,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.placing import StraightLinePolicy
+from repro.core.placing import StraightLinePolicy, place_compat, takes_warmup
 from repro.core.request import Request, Tier
 from repro.core.telemetry import FrequencyEstimator, Metrics
 from repro.core.tiers import TierSim
@@ -43,6 +43,15 @@ class Simulation:
         self._seq = itertools.count()
         self._done: Dict[int, bool] = {}
         self._f_t = 0.0
+        self._takes_warmup = takes_warmup(policy)
+
+    def _warmup(self) -> Optional[Dict[Tier, float]]:
+        """Per-tier warm-up fractions when any tier binds a live stats probe
+        (hybrid sim/real testbeds); None keeps placement purely paper-faithful."""
+        snap = {
+            t: w for t, sim in self.tiers.items() if (w := sim.warm_fraction()) is not None
+        }
+        return snap or None
 
     # -- event plumbing -----------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> None:
@@ -120,11 +129,14 @@ class Simulation:
                 self.freq.observe(now)
                 f_t = self.freq.frequency(now)
                 self._f_t = f_t
-                d = self.policy.place(
+                d = place_compat(
+                    self.policy,
                     req,
                     f_t,
                     self.tiers[Tier.FLASK].free_slots(),
                     self.tiers[Tier.DOCKER].free_slots(),
+                    self._warmup,
+                    self._takes_warmup,
                 )
                 self._submit(req, d.tier, now)
                 if self.cfg.hedge_after_s is not None and d.tier != Tier.SERVERLESS:

@@ -13,9 +13,23 @@ evaluation figures.
 from __future__ import annotations
 
 import math
+import threading
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence
+
+
+def warm_fraction(stats: Optional[dict]) -> Optional[float]:
+    """Bucket-compilation progress in [0, 1] from a ``capacity_now()``-style
+    snapshot: ``compile_events / total_buckets``. Returns None when the
+    snapshot is missing or exports no bucket total (unbucketed engines,
+    static tiers) — callers treat unknown warm-up as "always warm"."""
+    if not stats:
+        return None
+    total = stats.get("total_buckets") or 0
+    if total <= 0:
+        return None
+    return min(1.0, max(0.0, stats.get("compile_events", 0) / total))
 
 
 class FrequencyEstimator:
@@ -62,12 +76,19 @@ class CapacityGauge:
 
     def __init__(self):
         self._probes: Dict[str, Callable[[], int]] = {}
+        self._stats: Dict[str, Callable[[], dict]] = {}
 
     def register(self, name: str, probe: Callable[[], int]) -> None:
         self._probes[name] = probe
 
+    def register_stats(self, name: str, probe: Callable[[], dict]) -> None:
+        """Bind a rich snapshot probe (``engine.capacity_now``) so consumers
+        can read warm-up state, not just a free-capacity integer."""
+        self._stats[name] = probe
+
     def unregister(self, name: str) -> None:
         self._probes.pop(name, None)
+        self._stats.pop(name, None)
 
     def free(self, name: str) -> Optional[int]:
         """Live free capacity for ``name``, or None when no probe is bound."""
@@ -75,6 +96,14 @@ class CapacityGauge:
         if probe is None:
             return None
         return max(0, int(probe()))
+
+    def stats(self, name: str) -> Optional[dict]:
+        probe = self._stats.get(name)
+        return probe() if probe is not None else None
+
+    def warmth(self, name: str) -> Optional[float]:
+        """Warm-up fraction for ``name`` (compile progress), or None."""
+        return warm_fraction(self.stats(name))
 
     def snapshot(self) -> Dict[str, int]:
         return {name: max(0, int(p())) for name, p in self._probes.items()}
@@ -91,13 +120,17 @@ def percentile(xs: Sequence[float], p: float) -> float:
 @dataclass
 class Metrics:
     """Aggregates matching the paper's figures: failed rate, session length,
-    response time (median/p95), per-tier breakdowns."""
+    response time (median/p95), per-tier breakdowns. ``record`` is atomic
+    (lock-guarded) so the concurrent router's workers can report from any
+    thread; the read-side properties take instantaneous snapshots."""
 
     completed: List = field(default_factory=list)
     failed: List = field(default_factory=list)
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False, compare=False)
 
     def record(self, req) -> None:
-        (self.failed if req.failed else self.completed).append(req)
+        with self._lock:
+            (self.failed if req.failed else self.completed).append(req)
 
     @property
     def total(self) -> int:

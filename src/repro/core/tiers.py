@@ -21,6 +21,7 @@ from typing import Callable, Deque, List, Optional
 
 from repro.core.estimator import AppProfile, LatencyEstimator, SliceProfile, transfer_time
 from repro.core.request import Request, Tier
+from repro.core.telemetry import warm_fraction
 
 
 @dataclass
@@ -44,7 +45,9 @@ class TierSim:
     ``capacity_probe`` optionally binds a live capacity source (e.g. a
     ``CapacityGauge`` probe fed by a real serving engine's ``free_pages()``)
     so hybrid sim/real testbeds place against measured state instead of the
-    queue-model constants.
+    queue-model constants. ``stats_probe`` optionally binds the richer
+    ``capacity_now()`` snapshot from which ``warm_fraction()`` derives the
+    tier's bucket-compilation progress for warm-up-aware placement.
     """
 
     def __init__(
@@ -53,6 +56,7 @@ class TierSim:
         app: AppProfile,
         rng,
         capacity_probe: Optional[Callable[[], int]] = None,
+        stats_probe: Optional[Callable[[], dict]] = None,
     ):
         self.cfg = cfg
         self.app = app
@@ -64,6 +68,7 @@ class TierSim:
         self.served = 0
         self.busy_time = 0.0
         self.capacity_probe = capacity_probe
+        self.stats_probe = stats_probe
 
     # -- availability (Algorithm 1's S_F / S_D) -----------------------------
     def free_slots(self) -> int:
@@ -79,6 +84,14 @@ class TierSim:
 
     def worker_free(self) -> bool:
         return self.busy < self.cfg.n_workers
+
+    def warm_fraction(self) -> Optional[float]:
+        """Bucket-compilation progress of the live engine backing this tier
+        (None when no stats probe is bound — the queue-model tiers have no
+        warm-up phase)."""
+        if self.stats_probe is None:
+            return None
+        return warm_fraction(self.stats_probe())
 
     # -- service model -------------------------------------------------------
     def service_time(self, req: Request, now: float) -> float:

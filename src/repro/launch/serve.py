@@ -1,11 +1,21 @@
 """Serving launcher: StraightLine router over live engine tiers.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-        --requests 32 [--F 10] [--D 4096] [--weights-int8]
+        --requests 32 [--F 10] [--D 4096] [--weights-int8] \
+        [--workers 4] [--prewarm]
+
+``--workers N`` runs the concurrent router runtime (N worker threads per
+tier, bounded by each tier's capacity); 0 keeps the serial poll loop.
+``--prewarm`` compiles every prefill bucket at startup so the first request
+of each shape pays a warm dispatch instead of an XLA compile — and, because
+the placer reads warm-up state (compile_events / total_buckets) through
+each backend's ``stats_fn``, a prewarmed tier attracts traffic while a cold
+one is still compiling.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 
@@ -18,6 +28,10 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--weights-int8", action="store_true")
     ap.add_argument("--hedge-after", type=float, default=None)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="worker threads per tier (0 = serial poll loop)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="compile all prefill buckets before accepting traffic")
     args = ap.parse_args()
 
     import numpy as np
@@ -38,8 +52,21 @@ def main() -> None:
         interactive = InferenceEngine(cfg_q, EngineConfig(max_slots=1, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
         cfg = cfg_q
     batch_tier = InferenceEngine(cfg, EngineConfig(max_slots=4, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
-    elastic: list = []
     print(f"tiers ready in {time.time()-t0:.1f}s (weights_int8={args.weights_int8})")
+
+    if args.prewarm:
+        t = time.time()
+        for name, eng in (("interactive", interactive), ("batch", batch_tier)):
+            warmed = eng.prewarm()
+            snap = eng.capacity_now()
+            print(
+                f"  prewarmed {name}: buckets {warmed} "
+                f"({snap['compile_events']}/{snap['total_buckets']} shapes warm)"
+            )
+        print(f"  prewarm took {time.time()-t:.1f}s")
+
+    elastic: list = []
+    elastic_lock = threading.Lock()
 
     def run_on(engine):
         def run(req):
@@ -48,30 +75,40 @@ def main() -> None:
         return run
 
     def elastic_run(req):
-        if not elastic:
-            t = time.time()
-            elastic.append(InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=96, max_new_tokens=args.max_new_tokens), params=params))
-            print(f"  [elastic cold start {time.time()-t:.1f}s]")
+        with elastic_lock:             # one cold start even under concurrency
+            if not elastic:
+                t = time.time()
+                elastic.append(InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=96, max_new_tokens=args.max_new_tokens), params=params))
+                print(f"  [elastic cold start {time.time()-t:.1f}s]")
         return run_on(elastic[0])(req)
 
     router = StraightLineRouter(
         {
-            Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8),
-            Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64),
+            Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8,
+                                stats_fn=interactive.capacity_now),
+            Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64,
+                                 stats_fn=batch_tier.capacity_now),
             Tier.SERVERLESS: Backend(Tier.SERVERLESS, elastic_run, capacity=16),
         },
         policy=StraightLinePolicy(Thresholds(F=args.F, D=args.D)),
         window_s=10.0,
         hedge_after_s=args.hedge_after,
     )
+    if args.workers > 0:
+        router.start(args.workers)
     rng = np.random.default_rng(0)
+    t0 = time.time()
     for i in range(args.requests):
         size = float(rng.choice([512.0, 16384.0], p=[0.8, 0.2]))
         router.submit(Request(rid=i, arrival_t=0.0, data_size=size, timeout_s=300.0))
     router.drain()
+    wall = time.time() - t0
+    if args.workers > 0:
+        router.stop()
     m = router.metrics
     by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
-    print(f"{args.requests} requests: {m.summary()}")
+    mode = f"{args.workers} workers/tier" if args.workers > 0 else "serial poll loop"
+    print(f"{args.requests} requests in {wall:.1f}s ({mode}): {m.summary()}")
     print(f"placement: {by_tier}")
 
 

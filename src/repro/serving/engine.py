@@ -27,11 +27,32 @@ token-for-token identical to unbucketed. ``compile_events`` — the number of
 distinct prefill shapes executed — is exported through ``capacity_now()``
 so the placer and telemetry can see warm-up state.
 
-The jitted functions are built once per engine from the same step builders
-the dry-run lowers, so what serves here is what was dry-run there.
+Warm-up: ``prewarm(buckets)`` compiles the prefill path for every bucket
+length (or a chosen subset) before traffic arrives, so the first real
+request of each shape pays a warm dispatch instead of an XLA compile.
+Pre-warmed shapes count toward ``compile_events``, and ``capacity_now()``
+additionally exports ``total_buckets`` so the placer can compute a warm
+fraction (``compile_events / total_buckets``) and steer traffic toward
+warmed-up tiers while another is still compiling.
+
+Thread-safety contract: each engine owns a reentrant ``lock`` that covers
+ALL state-mutating entry points — ``submit``, ``step``, ``generate``,
+``fork``, ``prewarm`` — i.e. the host-side bookkeeping (waiting queue,
+slots, page allocator/tables, compile-shape set) **and** the jitted device
+calls, which donate their cache buffers and therefore must never run
+concurrently. Callers from multiple threads may invoke those entry points
+freely; they serialize on the lock (the concurrent router's per-tier worker
+pools rely on exactly this). The read-only telemetry — ``capacity_now``,
+``admission_capacity``, ``free_slots``, ``compile_events`` — is deliberately
+lock-free: it returns instantaneous, possibly-stale snapshots. Callers must
+NOT assume a capacity probe still holds by the time their request reaches
+the engine (admission re-checks under the lock), and must not touch engine
+internals (``waiting``, ``slot_seq``, ``allocator``, ``cache``) without
+holding ``lock``.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -47,7 +68,9 @@ from repro.serving.paging import (
     BlockAllocator,
     OutOfPages,
     PageTable,
+    bucket_lengths,
     bucket_tokens,
+    num_buckets,
 )
 
 
@@ -78,18 +101,21 @@ class _EngineBase:
     """Shared continuous-batching scaffolding: submission bookkeeping, the
     stop conditions (applied identically at admission and after decode so
     the dense/paged engines stay token-for-token interchangeable), prefill
-    length bucketing with its compile-event accounting, and the synchronous
-    generate loop. Subclasses provide ``step()`` and set ``_max_new`` /
-    ``_eos`` / ``_len_cap`` / ``_bucket_unit`` / ``_bucket_on``."""
+    length bucketing with its compile-event accounting, bucket pre-warming,
+    and the synchronous generate loop. Subclasses provide ``step()`` /
+    ``_prewarm_shape()`` and set ``_max_new`` / ``_eos`` / ``_len_cap`` /
+    ``_bucket_unit`` / ``_bucket_on`` plus the reentrant ``lock`` (see the
+    module docstring for the thread-safety contract)."""
 
     def free_slots(self) -> int:
         return sum(1 for s in self.slot_seq if s is None)
 
     def submit(self, prompt: List[int]) -> int:
-        seq = Sequence(self._sid, list(prompt))
-        self._sid += 1
-        self.waiting.append(seq)
-        return seq.sid
+        with self.lock:
+            seq = Sequence(self._sid, list(prompt))
+            self._sid += 1
+            self.waiting.append(seq)
+            return seq.sid
 
     # -- bucketed prefill shapes ---------------------------------------------
     def _bucket_len(self, n: int) -> int:
@@ -114,6 +140,42 @@ class _EngineBase:
         state. Placer/telemetry read it via ``capacity_now()``."""
         return len(self._prefill_shapes)
 
+    @property
+    def total_buckets(self) -> int:
+        """How many distinct prefill shapes bucketing can produce (0 when
+        bucketing is off — the shape count is then unbounded, so no warm
+        fraction exists)."""
+        return num_buckets(self._bucket_unit, self._len_cap) if self._bucket_on else 0
+
+    def prewarm(self, buckets: Optional[List[int]] = None) -> List[int]:
+        """Compile the prefill path for the given bucket lengths (default:
+        every bucket this engine can produce) before traffic arrives, so no
+        real request pays an XLA compile. Each shape compiles at most once
+        and counts toward ``compile_events``. Returns the lengths compiled.
+
+        The warm-up prefill runs a zero prompt through an idle slot (paged:
+        an all-null block-table row, so K/V writes land on the reserved
+        garbage page); no live sequence state is disturbed. When every slot
+        is busy the remaining shapes are skipped — prewarm is a startup
+        API, not a mid-traffic one."""
+        with self.lock:
+            if buckets is None:
+                if not self._bucket_on:
+                    return []
+                buckets = bucket_lengths(self._bucket_unit, self._len_cap)
+            warmed: List[int] = []
+            for Lp in sorted({int(b) for b in buckets}):
+                Lp = self._bucket_len(max(1, Lp))      # snap to a real bucket
+                if Lp in self._prefill_shapes:
+                    continue
+                slot = next((i for i, s in enumerate(self.slot_seq) if s is None), None)
+                if slot is None:
+                    break
+                self._prewarm_shape(Lp, slot)
+                self._prefill_shapes.add(Lp)
+                warmed.append(Lp)
+            return warmed
+
     def _stop_hit(self, seq: Sequence, tok: int, cache_len: int) -> bool:
         return (
             len(seq.out) >= self._max_new
@@ -122,15 +184,18 @@ class _EngineBase:
         )
 
     def generate(self, prompts: List[List[int]], max_steps: int = 10000) -> List[Sequence]:
-        """Synchronous convenience: run until all prompts finish."""
-        done: List[Sequence] = []
-        for p in prompts:
-            self.submit(p)
-        for _ in range(max_steps):
-            done.extend(self.step())
-            if not self.waiting and all(s is None for s in self.slot_seq):
-                break
-        return sorted(done, key=lambda s: s.sid)
+        """Synchronous convenience: run until all prompts finish. Holds the
+        engine lock end-to-end, so concurrent callers (the router's worker
+        pools) serialize whole generations rather than interleaving steps."""
+        with self.lock:
+            done: List[Sequence] = []
+            for p in prompts:
+                self.submit(p)
+            for _ in range(max_steps):
+                done.extend(self.step())
+                if not self.waiting and all(s is None for s in self.slot_seq):
+                    break
+            return sorted(done, key=lambda s: s.sid)
 
 
 class InferenceEngine(_EngineBase):
@@ -143,6 +208,7 @@ class InferenceEngine(_EngineBase):
         self._max_new, self._eos, self._len_cap = ecfg.max_new_tokens, ecfg.eos_id, ecfg.max_len
         self._bucket_unit, self._bucket_on = ecfg.bucket_unit, ecfg.bucket_prefill
         self._prefill_shapes = set()
+        self.lock = threading.RLock()
         B, L = ecfg.max_slots, ecfg.max_len
         self.cache = self.model.init_cache(B, L)
         self.slot_len = np.zeros(B, np.int32)        # tokens in cache per slot
@@ -197,6 +263,7 @@ class InferenceEngine(_EngineBase):
             "cache_tokens": self.ecfg.max_slots * self.ecfg.max_len,
             "waiting": len(self.waiting),
             "compile_events": self.compile_events,
+            "total_buckets": self.total_buckets,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -204,6 +271,15 @@ class InferenceEngine(_EngineBase):
         return self.free_slots()
 
     # -- public API -------------------------------------------------------------
+    def _prewarm_shape(self, Lp: int, slot: int) -> None:
+        """Compile (and discard) a prefill at shape ``Lp``: the dense prefill
+        does not donate its cache argument, so dropping the returned cache
+        leaves engine state untouched."""
+        toks = np.zeros(Lp, np.int32)
+        self._prefill(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(slot), jnp.asarray(1)
+        )
+
     def _admit(self) -> None:
         for i in range(self.ecfg.max_slots):
             if self.slot_seq[i] is None and self.waiting:
@@ -226,26 +302,27 @@ class InferenceEngine(_EngineBase):
 
     def step(self) -> List[Sequence]:
         """Admit + one decode step; returns sequences finished this step."""
-        self._admit()
-        finished, self._just_finished = self._just_finished, []
-        active = [i for i in range(self.ecfg.max_slots) if self.slot_seq[i] is not None]
-        if active:
-            lens = jnp.asarray(self.slot_len)
-            nxt, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self._last), lens
-            )
-            nxt = np.asarray(nxt)
-            for i in active:
-                seq = self.slot_seq[i]
-                self.slot_len[i] += 1
-                self._last[i] = nxt[i]
-                seq.out.append(int(nxt[i]))
-                if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
-                    seq.done = True
-                    finished.append(seq)
-                    self.slot_seq[i] = None
-                    self.slot_len[i] = 0
-        return finished
+        with self.lock:
+            self._admit()
+            finished, self._just_finished = self._just_finished, []
+            active = [i for i in range(self.ecfg.max_slots) if self.slot_seq[i] is not None]
+            if active:
+                lens = jnp.asarray(self.slot_len)
+                nxt, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(self._last), lens
+                )
+                nxt = np.asarray(nxt)
+                for i in active:
+                    seq = self.slot_seq[i]
+                    self.slot_len[i] += 1
+                    self._last[i] = nxt[i]
+                    seq.out.append(int(nxt[i]))
+                    if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
+                        seq.done = True
+                        finished.append(seq)
+                        self.slot_seq[i] = None
+                        self.slot_len[i] = 0
+            return finished
 
 
 # ---------------------------------------------------------------------------
@@ -305,6 +382,7 @@ class PagedInferenceEngine(_EngineBase):
         self._max_new, self._eos, self._len_cap = pcfg.max_new_tokens, pcfg.eos_id, pcfg.max_seq_len
         self._bucket_unit, self._bucket_on = pcfg.page_size, pcfg.bucket_prefill
         self._prefill_shapes = set()
+        self.lock = threading.RLock()
         B, P = pcfg.max_slots, pcfg.table_width
         self.cache = self.model.init_paged_cache(B, pcfg.num_pages, pcfg.page_size)
         self.allocator = BlockAllocator(pcfg.num_pages, pcfg.page_size)
@@ -383,6 +461,7 @@ class PagedInferenceEngine(_EngineBase):
             "cache_tokens": self.pcfg.cache_tokens,
             "waiting": len(self.waiting),
             "compile_events": self.compile_events,
+            "total_buckets": self.total_buckets,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -393,6 +472,23 @@ class PagedInferenceEngine(_EngineBase):
         return min(self.free_slots(), self.allocator.free_pages // per_seq)
 
     # -- public API -------------------------------------------------------------
+    def _prewarm_shape(self, Lp: int, slot: int) -> None:
+        """Compile a paged prefill at shape ``Lp`` through an all-null
+        block-table row: K/V writes land on the reserved null page (garbage
+        by design) and the idle slot's recurrent state is rewritten from
+        zero on any real install. The cache is reassigned because the paged
+        prefill donates its buffer."""
+        toks = np.zeros(Lp, np.int32)
+        row = np.full(self.pcfg.table_width, NULL_PAGE, np.int32)
+        _, self.cache = self._prefill(
+            self.params,
+            self.cache,
+            jnp.asarray(toks),
+            jnp.asarray(row),
+            jnp.asarray(slot),
+            jnp.asarray(1),
+        )
+
     def submit(self, prompt: List[int]) -> int:
         if len(prompt) + self.pcfg.max_new_tokens > self.pcfg.max_seq_len:
             raise ValueError(
@@ -498,65 +594,69 @@ class PagedInferenceEngine(_EngineBase):
         Growth runs first so admission can't grab the last pages only for
         the freshly prefilled sequence to be preempted in the same step —
         admitted sequences are already growth-covered (ceil((ctx+1)/ps))."""
-        self._ensure_growth(
-            [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
-        )
-        self._admit()
-        finished, self._just_finished = self._just_finished, []
-        active = [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
-        self.peak_active = max(self.peak_active, len(active))
-        if active:
-            nxt, self.cache = self._decode(
-                self.params,
-                self.cache,
-                jnp.asarray(self._last),
-                jnp.asarray(self.slot_len),
-                jnp.asarray(self.block_tab),
+        with self.lock:
+            self._ensure_growth(
+                [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
             )
-            nxt = np.asarray(nxt)
-            for i in active:
-                seq = self.slot_seq[i]
-                self.slot_len[i] += 1
-                self.tables[i].num_tokens = int(self.slot_len[i])
-                self._last[i] = nxt[i]
-                seq.out.append(int(nxt[i]))
-                if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
-                    seq.done = True
-                    finished.append(seq)
-                    self._release(i)
-        return finished
+            self._admit()
+            finished, self._just_finished = self._just_finished, []
+            active = [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
+            self.peak_active = max(self.peak_active, len(active))
+            if active:
+                nxt, self.cache = self._decode(
+                    self.params,
+                    self.cache,
+                    jnp.asarray(self._last),
+                    jnp.asarray(self.slot_len),
+                    jnp.asarray(self.block_tab),
+                )
+                nxt = np.asarray(nxt)
+                for i in active:
+                    seq = self.slot_seq[i]
+                    self.slot_len[i] += 1
+                    self.tables[i].num_tokens = int(self.slot_len[i])
+                    self._last[i] = nxt[i]
+                    seq.out.append(int(nxt[i]))
+                    if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
+                        seq.done = True
+                        finished.append(seq)
+                        self._release(i)
+            return finished
 
     def fork(self, sid: int) -> Optional[int]:
         """Clone a running sequence (hedged/retried copy): full prefix pages
         are shared via ref-counting, the trailing partial page is copied on
         device, and the clone continues decoding independently. Returns the
         new sid, or None if no free slot / pages."""
-        src = next((i for i, s in enumerate(self.slot_seq) if s is not None and s.sid == sid), None)
-        dst = self._free_slot()
-        if src is None or dst is None:
-            return None
-        try:
-            new_table = self.tables[src].fork(self.allocator)
-        except OutOfPages:
-            return None
-        seq = self.slot_seq[src]
-        clone = Sequence(self._sid, list(seq.prompt), out=list(seq.out))
-        self._sid += 1
-        n_full = new_table.num_tokens // self.pcfg.page_size
-        src_part = self.tables[src].pages[n_full:]
-        dst_part = new_table.pages[n_full:]
-        self.cache = self._copy_fork(
-            self.cache,
-            jnp.asarray(src_part or [NULL_PAGE], jnp.int32),
-            jnp.asarray(dst_part or [NULL_PAGE], jnp.int32),
-            jnp.asarray(src),
-            jnp.asarray(dst),
-        )
-        self.tables[dst] = new_table
-        self.block_tab[dst, :] = new_table.row(self.pcfg.table_width)
-        self.slot_seq[dst] = clone
-        self.slot_len[dst] = self.slot_len[src]
-        self._last[dst] = self._last[src]
-        self._stamp[dst] = self._stamp_next
-        self._stamp_next += 1
-        return clone.sid
+        with self.lock:
+            src = next(
+                (i for i, s in enumerate(self.slot_seq) if s is not None and s.sid == sid), None
+            )
+            dst = self._free_slot()
+            if src is None or dst is None:
+                return None
+            try:
+                new_table = self.tables[src].fork(self.allocator)
+            except OutOfPages:
+                return None
+            seq = self.slot_seq[src]
+            clone = Sequence(self._sid, list(seq.prompt), out=list(seq.out))
+            self._sid += 1
+            n_full = new_table.num_tokens // self.pcfg.page_size
+            src_part = self.tables[src].pages[n_full:]
+            dst_part = new_table.pages[n_full:]
+            self.cache = self._copy_fork(
+                self.cache,
+                jnp.asarray(src_part or [NULL_PAGE], jnp.int32),
+                jnp.asarray(dst_part or [NULL_PAGE], jnp.int32),
+                jnp.asarray(src),
+                jnp.asarray(dst),
+            )
+            self.tables[dst] = new_table
+            self.block_tab[dst, :] = new_table.row(self.pcfg.table_width)
+            self.slot_seq[dst] = clone
+            self.slot_len[dst] = self.slot_len[src]
+            self._last[dst] = self._last[src]
+            self._stamp[dst] = self._stamp_next
+            self._stamp_next += 1
+            return clone.sid

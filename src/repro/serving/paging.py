@@ -50,14 +50,22 @@ def bucket_tokens(n: int, unit: int, cap: int) -> int:
     return max(n, min(b * unit, cap))
 
 
+def bucket_lengths(unit: int, cap: int) -> List[int]:
+    """Every distinct bucket length ``bucket_tokens`` can produce, ascending
+    (the shapes ``prewarm`` must compile): power-of-two multiples of ``unit``
+    capped at ``cap``."""
+    out, b = [], unit
+    while True:
+        out.append(min(b, cap))
+        if b >= cap:
+            break
+        b *= 2
+    return out
+
+
 def num_buckets(unit: int, cap: int) -> int:
     """How many distinct bucket lengths exist: ceil(log2(cap/unit)) + 1."""
-    count = 1
-    b = unit
-    while b < cap:
-        b *= 2
-        count += 1
-    return count
+    return len(bucket_lengths(unit, cap))
 
 
 class OutOfPages(Exception):

@@ -1,10 +1,12 @@
 """Paged KV-cache subsystem: allocator invariants, kernel parity, engine v2
 preemption/resume/fork, and live-capacity placement feedback."""
 import dataclasses
+from collections import Counter
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_fallback import given, settings, st
 
 from repro.configs.registry import get_config
 from repro.core import CapacityGauge, Request, StraightLinePolicy, Thresholds, Tier
@@ -77,11 +79,90 @@ def test_page_table_fork_shares_full_pages_and_cows_partial():
     assert a.used_pages == 0
 
 
+def test_bucket_lengths_enumerates_exactly_the_bucket_fixed_points():
+    from repro.serving.paging import bucket_lengths, bucket_tokens, num_buckets
+
+    for unit, cap in [(16, 256), (16, 96), (4, 4), (8, 100)]:
+        ls = bucket_lengths(unit, cap)
+        assert len(ls) == num_buckets(unit, cap)       # one shape per compile
+        assert ls == sorted(set(ls))
+        # every enumerated length is a fixed point of bucket_tokens — i.e.
+        # prewarm compiles exactly the shapes real traffic will request
+        assert all(bucket_tokens(n, unit, cap) == n for n in ls)
+
+
 def test_page_table_row_pads_with_null_page():
     t = PageTable(4, [3, 5], num_tokens=6)
     assert t.row(4) == [3, 5, NULL_PAGE, NULL_PAGE]
     with pytest.raises(ValueError):
         t.row(1)
+
+
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["admit", "preempt", "fork", "grow", "free"]),
+            st.integers(0, 15),            # which live table the op targets
+            st.integers(1, 12),            # admit context length (tokens)
+        ),
+        min_size=1,
+        max_size=80,
+    )
+)
+@settings(max_examples=120, deadline=None)
+def test_allocator_pagetable_invariants_under_random_interleavings(ops):
+    """Drive the orders the concurrent router runtime can produce — admit,
+    preempt (release + later re-admit), fork (hedged copy: prefix sharing +
+    CoW), grow, free — against BlockAllocator/PageTable and assert after
+    every step that (a) the allocator's free/used partition is exact, and
+    (b) every page's ref-count equals the number of live tables holding it.
+    Finally releasing everything must return the pool to fully free."""
+    PS = 4
+    alloc = BlockAllocator(num_pages=13, page_size=PS)
+    tables = []                                        # live sequences
+    parked = []                                        # preempted, pages released
+
+    def check():
+        alloc.check_invariants()
+        held = Counter(p for t in tables for p in t.pages)
+        for page, n in held.items():
+            assert alloc.ref_count(page) == n, (page, n, alloc.ref_count(page))
+        assert alloc.used_pages == len(held)
+        assert alloc.free_pages == alloc.num_pages - 1 - len(held)
+
+    for op, idx, n_tokens in ops:
+        if op == "admit":
+            from_parked = bool(parked)
+            ctx = parked.pop(idx % len(parked)) if parked else n_tokens
+            need = PageTable.pages_needed(ctx + 1, PS)
+            if alloc.can_alloc(need):
+                tables.append(PageTable(PS, alloc.alloc(need), num_tokens=ctx))
+            elif from_parked:
+                parked.append(ctx)                     # re-park the preempted ctx
+        elif op == "preempt" and tables:
+            t = tables.pop(idx % len(tables))
+            parked.append(t.num_tokens)                # recompute-resume keeps only the ctx
+            t.release(alloc)
+        elif op == "fork" and tables:
+            src = tables[idx % len(tables)]
+            try:
+                tables.append(src.fork(alloc))
+            except OutOfPages:
+                pass                                   # failed fork must leak nothing
+        elif op == "grow" and tables:
+            t = tables[idx % len(tables)]
+            if t.capacity_tokens <= t.num_tokens and alloc.can_alloc(1):
+                t.append_pages(alloc.alloc(1))
+            t.num_tokens = min(t.num_tokens + 1, t.capacity_tokens)
+        elif op == "free" and tables:
+            tables.pop(idx % len(tables)).release(alloc)
+        check()
+
+    for t in tables:
+        t.release(alloc)
+    alloc.check_invariants()
+    assert alloc.used_pages == 0
+    assert alloc.free_pages == alloc.num_pages - 1
 
 
 # ---------------------------------------------------------------------------

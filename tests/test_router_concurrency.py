@@ -1,0 +1,360 @@
+"""Race-hunting tests for the concurrent router runtime.
+
+Covers the invariants concurrency can break and a serial loop never will:
+conservation (submitted == completed + failed, no lost or duplicated rids),
+exactly-once metrics recording for hedged requests in both finish orders,
+bounded result-map growth, and warm-up-aware placement reading live engine
+stats. The soak test drives real JAX engine-backed tiers from multiple
+submitter threads; the hedge-race test makes the original and its duplicate
+finish in both orders deterministically via event-controlled backends.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import Request, StraightLinePolicy, Thresholds, Tier
+from repro.core.router import Backend, RequestFailed, StraightLineRouter
+
+
+def _policy():
+    # F huge: no burst path; D = 1e6: moderate payloads fall through to S_F/S_D
+    return StraightLinePolicy(Thresholds(F=1e9, D=1e6))
+
+
+def _conserved(router, submitted):
+    """Assert conservation + exactly-once: every submitted rid appears in the
+    metrics exactly once, and nothing else does."""
+    m = router.metrics
+    recorded = [r.rid for r in m.completed + m.failed]
+    assert m.total == len(submitted), (m.total, len(submitted))
+    assert len(recorded) == len(set(recorded)), "a request recorded metrics twice"
+    assert set(recorded) == set(submitted), "lost or invented rids"
+
+
+# ---------------------------------------------------------------------------
+# Fake-backend stress: high volume, mixed failures, hedging
+# ---------------------------------------------------------------------------
+
+
+def test_soak_fake_backends_conservation_under_submitter_threads():
+    """8 submitter threads x 25 requests over sleepy backends with injected
+    tier failures and aggressive hedging: conservation and exactly-once must
+    hold under whatever interleavings the scheduler produces."""
+
+    def flask_run(req):
+        time.sleep(0.001)
+        if req.rid % 7 == 3:
+            raise RuntimeError("flask flake")        # -> retried on serverless
+        return f"f:{req.rid}"
+
+    def docker_run(req):
+        time.sleep(0.002)
+        return f"d:{req.rid}"
+
+    def sls_run(req):
+        time.sleep(0.001)
+        if req.rid % 50 == 11:
+            raise RuntimeError("sls down")           # terminal failure path
+        return f"s:{req.rid}"
+
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, flask_run, capacity=4, queue_cap=400),
+            Tier.DOCKER: Backend(Tier.DOCKER, docker_run, capacity=4, queue_cap=400),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, sls_run, capacity=16, queue_cap=400),
+        },
+        policy=_policy(),
+        hedge_after_s=0.005,
+        results_cap=1000,
+    )
+    router.start(4)
+    submitted = []
+    sub_lock = threading.Lock()
+
+    def submitter(base):
+        for i in range(25):
+            rid = base + i
+            router.submit(Request(rid=rid, arrival_t=0.0, data_size=100.0, timeout_s=60.0))
+            with sub_lock:
+                submitted.append(rid)
+
+    threads = [threading.Thread(target=submitter, args=(k * 1000,)) for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    router.drain(timeout=60)
+    router.stop()
+
+    _conserved(router, submitted)
+    # the runtime left nothing behind: queues empty, inflight back to zero
+    for b in router.backends.values():
+        assert b.inflight == 0
+        assert not any(not r.hedged for r in b.queue)  # only discarded hedge copies may remain
+
+
+def test_results_bounded_and_popped_on_retrieval():
+    """Regression: StraightLineRouter.results must not grow without bound —
+    completed results are evicted past results_cap and popped on retrieval."""
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, lambda req: f"ok:{req.rid}", capacity=4, queue_cap=500),
+            Tier.DOCKER: Backend(Tier.DOCKER, lambda req: "d", capacity=4, queue_cap=500),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: "s", capacity=8, queue_cap=500),
+        },
+        policy=_policy(),
+        results_cap=32,
+    )
+    router.start(2)
+    for i in range(200):
+        router.submit(Request(rid=i, arrival_t=0.0, data_size=100.0, timeout_s=60.0))
+    router.drain(timeout=30)
+    router.stop()
+    assert router.metrics.total == 200
+    assert len(router.results) <= 32                   # eviction holds the cap
+    # retrieval pops: a second result() for the same rid raises KeyError
+    rid = next(reversed(router.results))
+    val = router.result(rid)
+    assert val == f"ok:{rid}"
+    assert rid not in router.results
+    with pytest.raises(KeyError):
+        router.result(rid)
+    # evicted rids are gone too
+    with pytest.raises(KeyError):
+        router.result(0)
+
+
+@pytest.mark.parametrize("winner", ["original", "hedge"])
+def test_hedge_race_first_result_wins_both_orders(winner):
+    """Deterministic hedge race: the original (flask) and the duplicate
+    (serverless) block on test-controlled events, so both finish orders are
+    exercised. First result wins, metrics record exactly once, the loser's
+    result is discarded."""
+    release_flask = threading.Event()
+    release_sls = threading.Event()
+    sls_started = threading.Event()
+
+    def flask_run(req):
+        assert release_flask.wait(30)
+        return "flask-result"
+
+    def sls_run(req):
+        sls_started.set()
+        assert release_sls.wait(30)
+        return "sls-result"
+
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, flask_run, capacity=1),
+            Tier.DOCKER: Backend(Tier.DOCKER, lambda req: "d", capacity=1),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, sls_run, capacity=4),
+        },
+        policy=_policy(),
+        hedge_after_s=0.01,                            # hedge fires almost immediately
+    )
+    router.start(2)
+    try:
+        router.submit(Request(rid=7, arrival_t=0.0, data_size=100.0, timeout_s=60.0))
+        assert sls_started.wait(10), "hedge duplicate never started on the elastic tier"
+        if winner == "original":
+            release_flask.set()
+            got = router.result(7, timeout=10)
+            assert got == "flask-result"
+            release_sls.set()                          # loser finishes after the win
+        else:
+            release_sls.set()
+            got = router.result(7, timeout=10)
+            assert got == "sls-result"
+            release_flask.set()
+        router.drain(timeout=10)
+    finally:
+        release_flask.set()
+        release_sls.set()
+        router.stop()
+    m = router.metrics
+    assert m.total == 1, "hedged request must record metrics exactly once"
+    assert not m.failed
+    rec = m.completed[0]
+    assert rec.rid == 7
+    expect_tier = Tier.FLASK if winner == "original" else Tier.SERVERLESS
+    assert rec.tier == expect_tier                     # the winner's copy was recorded
+
+
+def test_hedge_rollback_adopts_failure_absorbed_in_flight_window():
+    """Regression for a stranding race: _fire_hedge optimistically counts
+    the duplicate (live=2) before enqueueing it; if the original fails in
+    that window its failure is absorbed 'because a sibling is live', and
+    when the enqueue then fails (elastic saturated) nobody is left to
+    settle the rid. The rollback must adopt the absorbed failure."""
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, lambda req: "f", capacity=1),
+            Tier.DOCKER: Backend(Tier.DOCKER, lambda req: "d", capacity=1),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: "s", capacity=4),
+        },
+        policy=_policy(),
+        hedge_after_s=1.0,
+    )
+    req = Request(rid=5, arrival_t=0.0, data_size=100.0, timeout_s=60.0)
+    assert router.submit(req) == Tier.FLASK           # queued, never run
+    c = router._completions[5]
+
+    def racing_push(clone):                           # deterministic replay of the window
+        router._fail(req, "error:Boom")               # original dies mid-hedge-fire
+        return False                                  # ...and the elastic enqueue fails
+
+    router.backends[Tier.SERVERLESS].try_push = racing_push
+    router._fire_hedge(req)
+    assert c.done and c.failure == "error:Boom" and c.live == 0
+    assert router.metrics.total == 1 and len(router.metrics.failed) == 1
+    with pytest.raises(RequestFailed):
+        router.result(5, timeout=0.1)
+
+
+def test_warmup_aware_placement_prefers_warm_tier():
+    """While the interactive tier is still compiling its prefill buckets the
+    placer routes moderate requests to the warmed-up batch tier; once the
+    interactive tier is warm, Algorithm 1's S_F preference resumes."""
+    stats = {
+        Tier.FLASK: {"compile_events": 0, "total_buckets": 4},
+        Tier.DOCKER: {"compile_events": 4, "total_buckets": 4},
+    }
+    mk = lambda t, cap: Backend(
+        t, run=lambda req: "ok", capacity=cap, stats_fn=lambda: stats[t]
+    )
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: mk(Tier.FLASK, 1),
+            Tier.DOCKER: mk(Tier.DOCKER, 4),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: "s", capacity=8),
+        },
+        policy=_policy(),
+    )
+    assert router.submit(Request(rid=0, arrival_t=0.0, data_size=100.0)) == Tier.DOCKER
+    stats[Tier.FLASK]["compile_events"] = 4            # interactive finished warming
+    assert router.submit(Request(rid=1, arrival_t=0.0, data_size=100.0)) == Tier.FLASK
+    router.drain()
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed soak: real paged JAX engines behind every tier
+# ---------------------------------------------------------------------------
+
+N_SUBMITTERS = 4
+REQS_PER_SUBMITTER = 6
+PROMPT, NEW, MAXLEN, PS = 5, 3, 64, 16
+
+
+@pytest.fixture(scope="module")
+def engine_tiers():
+    from repro.configs.registry import get_config
+    from repro.serving.engine import PagedEngineConfig, PagedInferenceEngine
+
+    cfg = get_config("smollm-360m", smoke=True).replace(attn_chunk=64)
+    interactive = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=PS, num_pages=1 + MAXLEN // PS, max_slots=1,
+                          max_seq_len=MAXLEN, max_new_tokens=NEW),
+    )
+    batch = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS, max_slots=2,
+                          max_seq_len=MAXLEN, max_new_tokens=NEW),
+        params=interactive.params,
+    )
+    elastic = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS, max_slots=2,
+                          max_seq_len=MAXLEN, max_new_tokens=NEW),
+        params=interactive.params,
+    )
+    return cfg, interactive, batch, elastic
+
+
+def test_prewarm_compiles_every_bucket_and_serving_adds_none(engine_tiers):
+    """prewarm() compiles all bucket shapes up front; traffic after it must
+    not trigger a single further prefill compile."""
+    cfg, interactive, batch, elastic = engine_tiers
+    warmed = batch.prewarm()
+    snap = batch.capacity_now()
+    assert snap["total_buckets"] > 0
+    assert snap["compile_events"] == snap["total_buckets"]
+    assert warmed or batch.compile_events == snap["total_buckets"]
+    before = batch.compile_events
+    out = batch.generate([[1, 2, 3, 4, 5]])
+    assert len(out) == 1 and len(out[0].out) == NEW
+    assert batch.compile_events == before, "a warm engine recompiled on real traffic"
+    assert batch.prewarm() == []                       # idempotent
+
+
+def test_soak_engine_backed_tiers(engine_tiers):
+    """The soak: N submitter threads x M requests against real paged-engine
+    tiers with live capacity probes and hedging enabled. Conservation and
+    exactly-once metrics must hold; every completed request carries real
+    engine tokens."""
+    import numpy as np
+
+    cfg, interactive, batch, elastic = engine_tiers
+    for eng in (interactive, batch, elastic):
+        eng.prewarm()
+
+    def run_on(engine):
+        def run(req):
+            prompt = list(np.random.default_rng(req.rid).integers(1, cfg.vocab_size, PROMPT))
+            return engine.generate([prompt])[0].out
+        return run
+
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(
+                Tier.FLASK, run_on(interactive), capacity=1, queue_cap=64,
+                capacity_fn=lambda: interactive.admission_capacity(PROMPT + NEW),
+                stats_fn=interactive.capacity_now,
+            ),
+            Tier.DOCKER: Backend(
+                Tier.DOCKER, run_on(batch), capacity=2, queue_cap=64,
+                capacity_fn=lambda: batch.admission_capacity(PROMPT + NEW),
+                stats_fn=batch.capacity_now,
+            ),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, run_on(elastic), capacity=4, queue_cap=64),
+        },
+        policy=_policy(),
+        hedge_after_s=0.05,
+        results_cap=256,
+    )
+    router.start(2)
+    submitted = []
+    sub_lock = threading.Lock()
+
+    def submitter(base):
+        for i in range(REQS_PER_SUBMITTER):
+            rid = base + i
+            router.submit(Request(rid=rid, arrival_t=0.0, data_size=100.0, timeout_s=120.0))
+            with sub_lock:
+                submitted.append(rid)
+
+    threads = [threading.Thread(target=submitter, args=(k * 100,)) for k in range(N_SUBMITTERS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    router.drain(timeout=120)
+    router.stop()
+
+    _conserved(router, submitted)
+    assert not router.metrics.failed, [r.fail_reason for r in router.metrics.failed]
+    # every result is a real engine generation: NEW greedy tokens, exactly
+    # the sequence a lone engine produces for that rid's prompt
+    probe = np.random.default_rng(submitted[0]).integers(1, cfg.vocab_size, PROMPT)
+    expect = elastic.generate([list(probe)])[0].out
+    got = router.result(submitted[0], timeout=5)
+    assert got == expect
+    for rid in submitted[1:]:
+        out = router.result(rid, timeout=5)
+        assert len(out) == NEW
+    # engines fully drained: no sequence left running, all pages back
+    for eng in (interactive, batch, elastic):
+        assert all(s is None for s in eng.slot_seq)
+        eng.allocator.check_invariants()
+        assert eng.allocator.free_pages == eng.pcfg.num_pages - 1
