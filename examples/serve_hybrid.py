@@ -1,15 +1,21 @@
 """End-to-end driver (the paper's kind: serving): batched requests through
 the StraightLine router onto three REAL JAX inference backends — with the
-placer consuming LIVE capacity from the paged serving engines.
+placer consuming LIVE capacity from the paged serving engines and every
+engine tier fronted by a continuous-batching step loop.
 
 Tiers (DESIGN.md §2):
   interactive — 1-slot paged engine, lowest latency, tiny page pool
   batch       — 8-slot paged engine over a shared KV page pool
   elastic     — engines spun up on demand (cold start = init + weight load)
 
-Algorithm 1's S_F/S_D availability checks pull through a CapacityGauge fed
-by each engine's ``admission_capacity()`` (free slots bounded by free KV
-pages), not static capacity constants.
+Each engine is owned by a ``serving.scheduler.EngineLoop``: router workers
+submit into the shared step loop and block on per-request futures, so
+concurrent requests on one engine interleave inside a single decode batch
+(instead of serializing whole generations on the engine lock). Algorithm 1's
+S_F/S_D availability checks pull through a CapacityGauge fed by each
+engine's ``admission_capacity()`` (free slots bounded by free KV pages), and
+the loop's ``capacity_now()`` additionally exports batch occupancy + queue
+depth so telemetry sees true interleaved utilization.
 
     PYTHONPATH=src python examples/serve_hybrid.py
 """
@@ -21,6 +27,7 @@ from repro.configs.registry import get_config
 from repro.core import CapacityGauge, Request, StraightLinePolicy, Thresholds, Tier
 from repro.core.router import Backend, StraightLineRouter
 from repro.serving.engine import PagedEngineConfig, PagedInferenceEngine
+from repro.serving.scheduler import EngineLoop
 
 CFG = get_config("smollm-360m", smoke=True).replace(attn_chunk=64)
 MAXLEN, NEW, PROMPT = 96, 8, 8
@@ -44,55 +51,66 @@ for eng in (interactive, batch_tier):
     eng.prewarm()
 print(f"batch tier: {batch_tier.capacity_now()}")
 
+# one continuous-batching step loop per engine: all device stepping happens
+# on the loop thread; submitters (router workers) only enqueue + wait
+interactive_loop = EngineLoop(interactive).start()
+batch_loop = EngineLoop(batch_tier).start()
+
 # live capacity feedback: the placer sees each engine's measured admission
-# capacity (slots bounded by free pages), not a hardcoded constant — and
-# warm-up state (compile_events/total_buckets) through the stats probes
+# capacity (slots bounded by free pages), not a hardcoded constant — plus
+# warm-up state and batch occupancy through the loops' stats probes
 gauge = CapacityGauge()
 gauge.register("flask", lambda: interactive.admission_capacity(PROMPT + NEW))
 gauge.register("docker", lambda: batch_tier.admission_capacity(PROMPT + NEW))
-gauge.register_stats("flask", interactive.capacity_now)
-gauge.register_stats("docker", batch_tier.capacity_now)
+gauge.register_stats("flask", interactive_loop.capacity_now)
+gauge.register_stats("docker", batch_loop.capacity_now)
 
 elastic_pool = []
 
 
-def run_on(engine):
-    def run(req: Request):
-        prompt = list(np.random.default_rng(req.rid).integers(1, CFG.vocab_size, PROMPT))
-        seqs = engine.generate([prompt])
-        return seqs[0].out
-    return run
+def prompt_for(req: Request):
+    return list(np.random.default_rng(req.rid).integers(1, CFG.vocab_size, PROMPT))
 
 
 def elastic_run(req: Request):
-    # cold start: spin up a fresh engine (weights init = load analogue)
+    # cold start: spin up a fresh engine + step loop (weights init = load
+    # analogue); concurrent elastic requests then batch on it too
     if not elastic_pool:
         t = time.time()
-        elastic_pool.append(
-            PagedInferenceEngine(
-                CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS,
-                                       max_slots=4, max_seq_len=MAXLEN, max_new_tokens=NEW),
-                params=interactive.params,
-            )
+        eng = PagedInferenceEngine(
+            CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS,
+                                   max_slots=4, max_seq_len=MAXLEN, max_new_tokens=NEW),
+            params=interactive.params,
         )
+        elastic_pool.append(EngineLoop(eng).start())
         print(f"  [elastic cold start: {time.time()-t:.1f}s]")
-    return run_on(elastic_pool[0])(req)
+    loop = elastic_pool[0]
+    return loop.wait(loop.submit(prompt_for(req)), req.timeout_s).out
+
+
+def loop_backend(tier, loop, capacity, queue_cap):
+    return Backend(
+        tier,
+        run=lambda req: loop.wait(loop.submit(prompt_for(req)), req.timeout_s).out,
+        capacity=capacity, queue_cap=queue_cap,
+        capacity_fn=lambda: gauge.free("flask" if tier == Tier.FLASK else "docker"),
+        stats_fn=lambda: gauge.stats("flask" if tier == Tier.FLASK else "docker"),
+        submit_fn=lambda req: loop.submit(prompt_for(req)),
+        wait_fn=lambda sid, timeout: loop.wait(sid, timeout).out,
+    )
 
 
 router = StraightLineRouter(
     {
-        Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8,
-                            capacity_fn=lambda: gauge.free("flask"),
-                            stats_fn=lambda: gauge.stats("flask")),
-        Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64,
-                             capacity_fn=lambda: gauge.free("docker"),
-                             stats_fn=lambda: gauge.stats("docker")),
+        Tier.FLASK: loop_backend(Tier.FLASK, interactive_loop, 1, 8),
+        Tier.DOCKER: loop_backend(Tier.DOCKER, batch_loop, 8, 64),
         Tier.SERVERLESS: Backend(Tier.SERVERLESS, elastic_run, capacity=16),
     },
     policy=StraightLinePolicy(Thresholds(F=10, D=4096)),   # scaled-down thresholds
     window_s=10.0,
 )
 
+router.start(8)                      # worker pools keep the decode batches fed
 rng = np.random.default_rng(0)
 N = 24
 # a burst: submit everything at once -> f_t crosses F -> elastic absorbs it
@@ -100,12 +118,17 @@ for i in range(N):
     size = float(rng.choice([512.0, 16384.0], p=[0.8, 0.2]))   # bimodal payloads
     router.submit(Request(rid=i, arrival_t=0.0, data_size=size, timeout_s=120.0))
 router.drain()
+router.stop()
 
 m = router.metrics
 print(f"\n{N} requests: {m.summary()}")
 by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
 print("placement:", by_tier)
 print("live capacity after drain:", gauge.snapshot())
+print("batch tier occupancy gauge:", gauge.occupancy("docker"),
+      "steps:", batch_loop.steps)
+for loop in [interactive_loop, batch_loop] + elastic_pool:
+    loop.stop()
 assert m.total == N and m.failure_rate == 0.0
 print("OK — all requests served by real JAX paged engines through Algorithm 1,")
-print("     with S_F/S_D read live from engine page pools")
+print("     batched by shared step loops, with S_F/S_D read live from page pools")

@@ -22,3 +22,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q ${TIMEOUT_ARGS[
 # the script the ROADMAP names is actually exercised in CI; the grad leg
 # doubles as a regression gate on the differentiable superblock barrier.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_models.py dense hybrid xlstm
+
+# Continuous-batching smoke (tiny model, few steps): asserts concurrent
+# requests actually interleave in one decode batch with outputs identical to
+# the serialized baseline — the step loop cannot silently regress to
+# serialized execution.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/continuous_batching.py --fast

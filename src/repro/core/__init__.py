@@ -15,7 +15,14 @@ from repro.core.placing import (
 )
 from repro.core.request import PlacementDecision, Request, Tier
 from repro.core.simulator import SimConfig, Simulation
-from repro.core.telemetry import CapacityGauge, FrequencyEstimator, Metrics, warm_fraction
+from repro.core.telemetry import (
+    CapacityGauge,
+    FrequencyEstimator,
+    Metrics,
+    batch_occupancy,
+    queue_depth,
+    warm_fraction,
+)
 from repro.core.tiers import TierConfig, TierSim
 
 __all__ = [
@@ -36,6 +43,8 @@ __all__ = [
     "Tier",
     "TierConfig",
     "TierSim",
+    "batch_occupancy",
     "placing_batch_jax",
+    "queue_depth",
     "warm_fraction",
 ]

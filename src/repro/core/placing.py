@@ -60,31 +60,45 @@ def place_compat(
     return policy.place(req, f_t, flask_free, docker_free)
 
 
-def _warm(warmup: Optional[dict], tier: Tier) -> float:
-    """Warm-up fraction for a tier; tiers without warm-up state (static
-    backends, no probe) are treated as fully warm."""
+def _warm_info(warmup: Optional[dict], tier: Tier):
+    """(warm_fraction, compile_cost_s) for a tier. Entries may be a bare
+    float (cost unknown) or a dict {"warmth": f, "compile_cost_s": s} built
+    from the engine's measured compile-time EMA. Tiers without warm-up state
+    (static backends, no probe) are treated as fully warm."""
     if warmup is None:
-        return 1.0
+        return 1.0, None
     v = warmup.get(tier)
-    return 1.0 if v is None else float(v)
+    if v is None:
+        return 1.0, None
+    if isinstance(v, dict):
+        return float(v.get("warmth", 1.0)), v.get("compile_cost_s")
+    return float(v), None
 
 
 class StraightLinePolicy:
     """Algorithm 1, line-for-line — plus warm-up-aware availability.
 
     ``warmup`` (optional) maps tiers to their bucket-compilation progress in
-    [0, 1] (``compile_events / total_buckets`` from ``capacity_now()``).
+    [0, 1] (``compile_events / total_buckets`` from ``capacity_now()``) —
+    either bare, or wrapped with the engine's measured per-compile cost
+    (``{"warmth": f, "compile_cost_s": s}`` from the ``compile_ema_s`` EMA).
     While a tier is still compiling its prefill buckets, a request routed
     there may hit an XLA compile instead of a warm kernel; when both
     interactive and batch tiers are available, the policy therefore prefers
-    the *warmer* one. The faithful lines 3/6 (burst and large-payload) and
-    the fall-through order are untouched; with ``warmup=None`` the decision
-    is byte-identical to the paper's Algorithm 1."""
+    the *warmer* one — but only when the detour is worth it: with a measured
+    compile cost, the expected cold penalty ``(1 - warmth) *
+    compile_cost_s`` must exceed ``hop_cost_s`` (the latency price of
+    hopping interactive -> batch) or the warmth gap is ignored (a one-bucket
+    gap on a tiny model is not worth a tier hop). The faithful lines 3/6
+    (burst and large-payload) and the fall-through order are untouched; with
+    ``warmup=None`` the decision is byte-identical to the paper's
+    Algorithm 1."""
 
     name = "straightline"
 
-    def __init__(self, thresholds: Thresholds = Thresholds()):
+    def __init__(self, thresholds: Thresholds = Thresholds(), hop_cost_s: float = 0.05):
         self.th = thresholds
+        self.hop_cost_s = hop_cost_s
 
     def place(
         self,
@@ -100,9 +114,11 @@ class StraightLinePolicy:
         if req.data_size > th.D:                                     # line 6
             return PlacementDecision(req.rid, Tier.DOCKER, "r_d>D")
         if flask_free > 0:                                           # line 10
-            wf, wd = _warm(warmup, Tier.FLASK), _warm(warmup, Tier.DOCKER)
-            if docker_free > 0 and wd > wf:
-                # both available but flask is still compiling its buckets:
+            wf, cf = _warm_info(warmup, Tier.FLASK)
+            wd, _ = _warm_info(warmup, Tier.DOCKER)
+            if docker_free > 0 and wd > wf and self._hop_pays(wf, cf):
+                # both available but flask is still compiling its buckets
+                # (and the expected compile stall outweighs the tier hop):
                 # route to the warmer batch tier until flask catches up
                 return PlacementDecision(
                     req.rid, Tier.DOCKER, f"S_F cold (warm {wf:.2f}<{wd:.2f}), S_D warmer"
@@ -111,6 +127,15 @@ class StraightLinePolicy:
         if docker_free > 0:                                          # line 14
             return PlacementDecision(req.rid, Tier.DOCKER, "S_F empty, S_D non-empty")
         return PlacementDecision(req.rid, Tier.SERVERLESS, "all busy")  # line 18
+
+    def _hop_pays(self, warmth: float, compile_cost_s: Optional[float]) -> bool:
+        """Is detouring off the interactive tier worth its remaining warm-up?
+        With no measured compile cost the gap alone decides (original
+        behavior); with one, the expected stall of a cold bucket —
+        ``(1 - warmth) * compile_cost_s`` — must exceed the tier-hop price."""
+        if compile_cost_s is None:
+            return True
+        return (1.0 - warmth) * float(compile_cost_s) > self.hop_cost_s
 
     def place_all(
         self,

@@ -62,9 +62,19 @@ class Backend:
     ``capacity_fn`` is an optional live probe (e.g. the paged engine's
     ``admission_capacity``): when set, the placer sees the tier's measured
     free capacity instead of the static ``capacity`` constant.
-    ``stats_fn`` is an optional richer snapshot (``engine.capacity_now``)
-    from which the router derives warm-up state (compile_events vs
-    total_buckets) for warm-up-aware placement.
+    ``stats_fn`` is an optional richer snapshot (``engine.capacity_now`` or
+    ``EngineLoop.capacity_now``) from which the router derives warm-up state
+    (compile_events vs total_buckets, weighted by the measured
+    ``compile_ema_s``) and batch occupancy for placement.
+
+    ``submit_fn``/``wait_fn`` select the continuous-batching execution path:
+    ``submit_fn(req)`` enqueues the request into a shared engine step loop
+    (``serving.scheduler.EngineLoop``) and returns a ticket; ``wait_fn(
+    ticket, timeout)`` blocks until it finishes. The worker thread sleeps on
+    a future while the loop batches the sequence with every other in-flight
+    request on that engine — set ``capacity`` to the engine's ``max_slots``
+    so the pool keeps the batch fed. When unset, ``run(req)`` executes
+    synchronously (lock-holding ``generate``; the serialized baseline).
     """
 
     tier: Tier
@@ -75,6 +85,8 @@ class Backend:
     queue: Deque[Request] = field(default_factory=deque)
     capacity_fn: Optional[Callable[[], int]] = None
     stats_fn: Optional[Callable[[], dict]] = None
+    submit_fn: Optional[Callable[[Request], object]] = None
+    wait_fn: Optional[Callable[[object, Optional[float]], object]] = None
 
     def __post_init__(self):
         # cond shares the lock: enqueue/dequeue and inflight accounting are
@@ -96,14 +108,6 @@ class Backend:
             if live is not None:
                 return max(0, int(live))
         return max(0, self.capacity - self.inflight)
-
-    def warmth(self) -> Optional[float]:
-        """Bucket-compilation progress in [0, 1] from ``stats_fn``, or None
-        when the backend exports no warm-up state (static tiers are treated
-        as always warm by the policy)."""
-        if self.stats_fn is None:
-            return None
-        return warm_fraction(self.stats_fn())
 
     def try_push(self, req: Request) -> bool:
         """Enqueue within queue_cap (atomically) and wake a worker."""
@@ -218,14 +222,23 @@ class StraightLineRouter:
     def _free(self, t: Tier) -> int:
         return self.backends[t].free()
 
-    def _warmup_snapshot(self) -> Optional[Dict[Tier, float]]:
-        """Per-tier warm-up fractions for warm-up-aware placement; None when
-        no backend exports warm-up state (keeps Algorithm 1 byte-faithful)."""
-        snap = {
-            t: w
-            for t, b in self.backends.items()
-            if b.stats_fn is not None and (w := b.warmth()) is not None
-        }
+    def _warmup_snapshot(self) -> Optional[Dict[Tier, object]]:
+        """Per-tier warm-up state for warm-up-aware placement; None when no
+        backend exports any (keeps Algorithm 1 byte-faithful). A tier whose
+        snapshot carries a measured ``compile_ema_s`` gets a rich entry
+        ({"warmth", "compile_cost_s"}) so the policy can weigh the warmth
+        gap against the actual cost of a cold bucket; otherwise the bare
+        warm fraction (cost unknown -> policy keeps the plain preference)."""
+        snap: Dict[Tier, object] = {}
+        for t, b in self.backends.items():
+            if b.stats_fn is None:
+                continue
+            stats = b.stats_fn()
+            w = warm_fraction(stats)
+            if w is None:
+                continue
+            cost = (stats or {}).get("compile_ema_s") or 0.0
+            snap[t] = {"warmth": w, "compile_cost_s": cost} if cost > 0.0 else w
         return snap or None
 
     def submit(self, req: Request) -> Tier:
@@ -376,7 +389,15 @@ class StraightLineRouter:
 
     def _execute(self, b: Backend, req: Request) -> None:
         """Run one dequeued request to a terminal state (or hand it to the
-        retry path). Called with no locks held."""
+        retry path). Called with no locks held.
+
+        Continuous-batching backends (``submit_fn``/``wait_fn``) execute in
+        two phases: submit into the engine's shared step loop, then block on
+        the per-request future — the engine interleaves this request with
+        every other in-flight one instead of serializing on its lock.
+        Hedging and exactly-once settlement are unchanged: either way this
+        worker owns one copy of the request until it reaches a terminal
+        state."""
         c = self._completion_for(req)
         if c.done:
             with self._lock:
@@ -388,7 +409,18 @@ class StraightLineRouter:
             return
         req.start_t = now
         try:
-            out = b.run(req)
+            if b.submit_fn is not None and b.wait_fn is not None:
+                ticket = b.submit_fn(req)
+                left = max(0.0, req.timeout_s - (self.clock() - req.arrival_t))
+                out = b.wait_fn(ticket, left)
+            else:
+                out = b.run(req)
+        except TimeoutError:
+            # the engine loop outlived the request's deadline: the deadline
+            # verdict is final — retrying elsewhere cannot beat a clock that
+            # already ran out
+            self._fail(req, "timeout")
+            return
         except Exception as e:  # tier failure
             retryable = (
                 self.retry_on_failure and not req.hedged and req.tier != Tier.SERVERLESS

@@ -19,6 +19,37 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 
+def batch_occupancy(stats: Optional[dict]) -> Optional[float]:
+    """Decode-batch occupancy in [0, 1] from a ``capacity_now()``-style
+    snapshot: active sequences / ``num_slots``. With a continuous-batching
+    step loop (serving/scheduler.py) this is the fraction of the shared
+    decode batch actually interleaving work — the utilization the placer's
+    capacity feedback ultimately buys. Returns None when the snapshot is
+    missing or exports no slot total."""
+    if not stats:
+        return None
+    total = stats.get("num_slots") or 0
+    if total <= 0:
+        return None
+    active = stats.get("active_slots")
+    if active is None:
+        free = stats.get("free_slots")
+        if free is None:
+            return None
+        active = total - free
+    return min(1.0, max(0.0, active / total))
+
+
+def queue_depth(stats: Optional[dict]) -> Optional[int]:
+    """Admitted-but-waiting sequences from a ``capacity_now()``-style
+    snapshot (``queue_depth`` from an EngineLoop, else the engine's raw
+    ``waiting``), or None when unknown."""
+    if not stats:
+        return None
+    d = stats.get("queue_depth", stats.get("waiting"))
+    return None if d is None else int(d)
+
+
 def warm_fraction(stats: Optional[dict]) -> Optional[float]:
     """Bucket-compilation progress in [0, 1] from a ``capacity_now()``-style
     snapshot: ``compile_events / total_buckets``. Returns None when the
@@ -104,6 +135,15 @@ class CapacityGauge:
     def warmth(self, name: str) -> Optional[float]:
         """Warm-up fraction for ``name`` (compile progress), or None."""
         return warm_fraction(self.stats(name))
+
+    def occupancy(self, name: str) -> Optional[float]:
+        """Decode-batch occupancy for ``name`` (continuous-batching
+        interleaving), or None when the stats probe exports no slots."""
+        return batch_occupancy(self.stats(name))
+
+    def queue_depth(self, name: str) -> Optional[int]:
+        """Admitted-but-waiting depth behind ``name``'s step loop, or None."""
+        return queue_depth(self.stats(name))
 
     def snapshot(self) -> Dict[str, int]:
         return {name: max(0, int(p())) for name, p in self._probes.items()}

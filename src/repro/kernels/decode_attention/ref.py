@@ -4,12 +4,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def decode_attention_ref(q, k, v, lengths):
+def decode_attention_ref(q, k, v, lengths, softcap: float = 0.0):
     """q: (B, KV, G, hd); k/v: (B, KV, T, hd); lengths: (B,)."""
     B, KV, G, hd = q.shape
     T = k.shape[2]
     s = jnp.einsum("bkgh,bkth->bkgt", q.astype(jnp.float32), k.astype(jnp.float32))
     s = s / (hd ** 0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
     mask = jnp.arange(T)[None, None, None, :] < lengths[:, None, None, None]
     s = jnp.where(mask, s, -1e30)
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))

@@ -25,7 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, ps, n_p, scale):
+def _kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, ps, n_p, scale, softcap):
     b = pl.program_id(0)
     ip = pl.program_id(2)
 
@@ -46,6 +46,10 @@ def _kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                        # (G, ps)
+        if softcap:
+            # gemma-style logit softcap, applied pre-mask so capped scores
+            # match the dense decode path bit-for-bit
+            s = jnp.tanh(s / softcap) * softcap
         tpos = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(tpos < valid, s, NEG_INF)
         m_prev = m_ref[...]                              # (G, 1)
@@ -64,7 +68,7 @@ def _kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "softcap"))
 def paged_attention_grouped(
     q: jax.Array,          # (B, KV, G, hd) — one token per sequence
     pool_k: jax.Array,     # (num_pages, KV, ps, hd) shared page pool
@@ -72,13 +76,14 @@ def paged_attention_grouped(
     block_tab: jax.Array,  # (B, P) int32 physical page per logical block
     lengths: jax.Array,    # (B,) int32 valid tokens per sequence
     interpret: bool = True,
+    softcap: float = 0.0,
 ) -> jax.Array:
     B, KV, G, hd = q.shape
     ps = pool_k.shape[2]
     n_p = block_tab.shape[1]
     scale = 1.0 / (hd ** 0.5)
 
-    kernel = functools.partial(_kernel, ps=ps, n_p=n_p, scale=scale)
+    kernel = functools.partial(_kernel, ps=ps, n_p=n_p, scale=scale, softcap=softcap)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, n_p),
@@ -101,3 +106,68 @@ def paged_attention_grouped(
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
     )(lengths, block_tab, q, pool_k, pool_v)
+
+
+# ---------------------------------------------------------------------------
+# Prefill write — the decode gather's twin: scatter one prompt's K/V through
+# its block-table row into the pool. Grid (n_blocks,): step ib transposes one
+# ps-token chunk of the incoming K/V into page layout and lands it in
+# physical page tab_row[ib] — the scalar-prefetched row drives the OUTPUT
+# index map, so the scatter happens in the write-back DMA and the kernel body
+# is a pure VMEM transpose. The pools are input/output-aliased: only visited
+# pages change, everything else is untouched in place. Bucket padding past
+# the sequence's allocated pages carries tab_row entries of the reserved null
+# page 0 — those trailing steps all land on (and fully overwrite) the null
+# page, which is garbage by contract and never read back.
+# ---------------------------------------------------------------------------
+
+
+def _write_kernel(tab_ref, k_ref, v_ref, pool_k_ref, pool_v_ref, ok_ref, ov_ref):
+    # k/v block: (1, ps, KV, hd) token-major -> page layout (KV, ps, hd)
+    ok_ref[0] = jnp.transpose(k_ref[0], (1, 0, 2)).astype(ok_ref.dtype)
+    ov_ref[0] = jnp.transpose(v_ref[0], (1, 0, 2)).astype(ov_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_write_grouped(
+    pool_k: jax.Array,     # (num_pages, KV, ps, hd) shared page pool (donated)
+    pool_v: jax.Array,
+    k: jax.Array,          # (1, Lp, KV, hd) — Lp a multiple of ps
+    v: jax.Array,
+    tab_row: jax.Array,    # (P,) int32, P >= Lp // ps
+    interpret: bool = True,
+):
+    """Returns (new_pool_k, new_pool_v); Lp % ps must be 0 (bucketed prefill
+    guarantees it — ops.py falls back to the jnp ref for ragged lengths)."""
+    num_pages, KV, ps, hd = pool_k.shape
+    Lp = k.shape[1]
+    assert Lp % ps == 0, f"Lp={Lp} not a page multiple (ps={ps})"
+    nb = Lp // ps
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, ps, KV, hd), lambda ib, tab: (0, ib, 0, 0)),
+            pl.BlockSpec((1, ps, KV, hd), lambda ib, tab: (0, ib, 0, 0)),
+            # the pools stay in place (aliased outputs); no copy-in
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            # the scatter: chunk ib of the prompt lands in page tab[ib]
+            pl.BlockSpec((1, KV, ps, hd), lambda ib, tab: (tab[ib], 0, 0, 0)),
+            pl.BlockSpec((1, KV, ps, hd), lambda ib, tab: (tab[ib], 0, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _write_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(pool_k.shape, pool_k.dtype),
+            jax.ShapeDtypeStruct(pool_v.shape, pool_v.dtype),
+        ],
+        # operand indices count the scalar-prefetch arg: tab=0, k=1, v=2
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(tab_row, k, v, pool_k, pool_v)

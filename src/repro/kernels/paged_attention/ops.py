@@ -8,37 +8,39 @@ import os
 
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_attention_grouped
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_grouped,
+    paged_prefill_write_grouped,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_ref,
+    paged_prefill_write_ref,
+)
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-def paged_prefill_write(pool_k, pool_v, k, v, tab_row):
+def paged_prefill_write(pool_k, pool_v, k, v, tab_row, use_pallas: bool = True):
     """Scatter one prefilled prompt's K/V through its block-table row.
 
     pool_k/pool_v: (num_pages, KV, ps, hd); k/v: (1, Lp, KV, hd) — Lp may be
     bucket-padded past the sequence's allocated pages, in which case
     ``tab_row[t // ps]`` is the reserved null page 0 and the pad writes are
     absorbed there (never read: the length mask kills those positions).
-    Returns (new_pool_k, new_pool_v)."""
+    Returns (new_pool_k, new_pool_v).
+
+    The Pallas kernel requires Lp to be a page multiple (bucketed prefill
+    always is); ragged lengths (bucketing off) fall back to the jnp ref."""
     ps = pool_k.shape[2]
-    KV = pool_k.shape[1]
     Lp = k.shape[1]
-    t = jnp.arange(Lp)
-    pages = tab_row[t // ps]
-    offs = t % ps
-    kvh = jnp.arange(KV)
-    new_k = pool_k.at[pages[:, None], kvh[None, :], offs[:, None]].set(
-        k[0].astype(pool_k.dtype)
-    )
-    new_v = pool_v.at[pages[:, None], kvh[None, :], offs[:, None]].set(
-        v[0].astype(pool_v.dtype)
-    )
-    return new_k, new_v
+    tab = jnp.asarray(tab_row, jnp.int32)
+    if use_pallas and Lp % ps == 0:
+        return paged_prefill_write_grouped(pool_k, pool_v, k, v, tab, interpret=_INTERPRET)
+    return paged_prefill_write_ref(pool_k, pool_v, k, v, tab)
 
 
-def paged_attention(q, pool_k, pool_v, block_tab, lengths, use_pallas: bool = True):
+def paged_attention(q, pool_k, pool_v, block_tab, lengths, use_pallas: bool = True,
+                    softcap: float = 0.0):
     """q: (B, S=1, H, hd); pools: (num_pages, KV, ps, hd); block_tab: (B, P);
     lengths: (B,) valid tokens per sequence. Returns (B, 1, H, hd)."""
     B, S, H, hd = q.shape
@@ -48,7 +50,9 @@ def paged_attention(q, pool_k, pool_v, block_tab, lengths, use_pallas: bool = Tr
     lens = jnp.asarray(lengths, jnp.int32)
     tab = jnp.asarray(block_tab, jnp.int32)
     if use_pallas:
-        o = paged_attention_grouped(qg, pool_k, pool_v, tab, lens, interpret=_INTERPRET)
+        o = paged_attention_grouped(
+            qg, pool_k, pool_v, tab, lens, interpret=_INTERPRET, softcap=softcap
+        )
     else:
-        o = paged_attention_ref(qg, pool_k, pool_v, tab, lens)
+        o = paged_attention_ref(qg, pool_k, pool_v, tab, lens, softcap=softcap)
     return o.reshape(B, 1, H, hd)

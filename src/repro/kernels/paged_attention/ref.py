@@ -1,4 +1,6 @@
-"""Pure-jnp oracle for paged GQA decode attention: gather then dense."""
+"""Pure-jnp oracles for the paged KV-pool kernels: decode gather-attention
+(gather then dense) and the prefill write scatter (`.at[].set` through the
+block-table row)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -17,8 +19,32 @@ def gather_kv(pool: jnp.ndarray, block_tab: jnp.ndarray) -> jnp.ndarray:
     return g.transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
 
 
-def paged_attention_ref(q, pool_k, pool_v, block_tab, lengths):
+def paged_attention_ref(q, pool_k, pool_v, block_tab, lengths, softcap: float = 0.0):
     """q: (B, KV, G, hd); pools: (num_pages, KV, ps, hd); lengths: (B,)."""
     k = gather_kv(pool_k, block_tab)
     v = gather_kv(pool_v, block_tab)
-    return decode_attention_ref(q, k, v, lengths)
+    return decode_attention_ref(q, k, v, lengths, softcap=softcap)
+
+
+def paged_prefill_write_ref(pool_k, pool_v, k, v, tab_row):
+    """Scatter one prefilled prompt's K/V through its block-table row.
+
+    pool_k/pool_v: (num_pages, KV, ps, hd); k/v: (1, Lp, KV, hd) — Lp may be
+    bucket-padded past the sequence's allocated pages, in which case
+    ``tab_row[t // ps]`` is the reserved null page 0 and the pad writes are
+    absorbed there (never read: the length mask kills those positions).
+    Returns (new_pool_k, new_pool_v)."""
+    ps = pool_k.shape[2]
+    KV = pool_k.shape[1]
+    Lp = k.shape[1]
+    t = jnp.arange(Lp)
+    pages = tab_row[t // ps]
+    offs = t % ps
+    kvh = jnp.arange(KV)
+    new_k = pool_k.at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        k[0].astype(pool_k.dtype)
+    )
+    new_v = pool_v.at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        v[0].astype(pool_v.dtype)
+    )
+    return new_k, new_v

@@ -2,15 +2,21 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --requests 32 [--F 10] [--D 4096] [--weights-int8] \
-        [--workers 4] [--prewarm]
+        [--workers 4] [--prewarm] [--serialized]
 
 ``--workers N`` runs the concurrent router runtime (N worker threads per
 tier, bounded by each tier's capacity); 0 keeps the serial poll loop.
-``--prewarm`` compiles every prefill bucket at startup so the first request
-of each shape pays a warm dispatch instead of an XLA compile — and, because
-the placer reads warm-up state (compile_events / total_buckets) through
-each backend's ``stats_fn``, a prewarmed tier attracts traffic while a cold
-one is still compiling.
+Engine tiers serve through continuous-batching step loops
+(``serving.scheduler.EngineLoop``): router workers submit into a shared
+per-engine loop and block on per-request futures, so concurrent requests
+interleave inside one decode batch instead of serializing whole generations
+on the engine lock (``--serialized`` restores the lock-holding ``generate``
+path as a baseline). ``--prewarm`` compiles every prefill bucket at startup
+so the first request of each shape pays a warm dispatch instead of an XLA
+compile — and, because the placer reads warm-up state (compile_events /
+total_buckets, weighted by the measured compile-cost EMA) through each
+backend's ``stats_fn``, a prewarmed tier attracts traffic while a cold one
+is still compiling.
 """
 from __future__ import annotations
 
@@ -32,6 +38,8 @@ def main() -> None:
                     help="worker threads per tier (0 = serial poll loop)")
     ap.add_argument("--prewarm", action="store_true",
                     help="compile all prefill buckets before accepting traffic")
+    ap.add_argument("--serialized", action="store_true",
+                    help="bypass the engine step loops (lock-holding generate baseline)")
     args = ap.parse_args()
 
     import numpy as np
@@ -41,6 +49,7 @@ def main() -> None:
     from repro.core.router import Backend, StraightLineRouter
     from repro.models.quant import quantize_params
     from repro.serving.engine import EngineConfig, InferenceEngine
+    from repro.serving.scheduler import EngineLoop
 
     cfg = get_config(args.arch, smoke=True).replace(attn_chunk=64)
     t0 = time.time()
@@ -68,26 +77,49 @@ def main() -> None:
     elastic: list = []
     elastic_lock = threading.Lock()
 
+    def prompt_for(req):
+        return list(np.random.default_rng(req.rid).integers(1, cfg.vocab_size, 8))
+
     def run_on(engine):
         def run(req):
-            prompt = list(np.random.default_rng(req.rid).integers(1, cfg.vocab_size, 8))
-            return engine.generate([prompt])[0].out
+            return engine.generate([prompt_for(req)])[0].out
         return run
 
     def elastic_run(req):
         with elastic_lock:             # one cold start even under concurrency
             if not elastic:
                 t = time.time()
-                elastic.append(InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=96, max_new_tokens=args.max_new_tokens), params=params))
+                eng = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
+                elastic.append(eng if args.serialized else EngineLoop(eng).start())
                 print(f"  [elastic cold start {time.time()-t:.1f}s]")
-        return run_on(elastic[0])(req)
+        if args.serialized:
+            return run_on(elastic[0])(req)
+        loop = elastic[0]
+        return loop.wait(loop.submit(prompt_for(req)), req.timeout_s).out
+
+    loops: list = []
+
+    def engine_backend(tier, engine, capacity, queue_cap):
+        """Continuous-batching backend: workers submit into the engine's
+        shared step loop and block on futures (capacity = max_slots so the
+        pool keeps the decode batch fed); --serialized keeps the
+        lock-holding generate path."""
+        if args.serialized:
+            return Backend(tier, run_on(engine), capacity=capacity, queue_cap=queue_cap,
+                           stats_fn=engine.capacity_now)
+        loop = EngineLoop(engine).start()
+        loops.append(loop)
+        return Backend(
+            tier, run_on(engine), capacity=capacity, queue_cap=queue_cap,
+            stats_fn=loop.capacity_now,
+            submit_fn=lambda req: loop.submit(prompt_for(req)),
+            wait_fn=lambda sid, timeout: loop.wait(sid, timeout).out,
+        )
 
     router = StraightLineRouter(
         {
-            Tier.FLASK: Backend(Tier.FLASK, run_on(interactive), capacity=1, queue_cap=8,
-                                stats_fn=interactive.capacity_now),
-            Tier.DOCKER: Backend(Tier.DOCKER, run_on(batch_tier), capacity=4, queue_cap=64,
-                                 stats_fn=batch_tier.capacity_now),
+            Tier.FLASK: engine_backend(Tier.FLASK, interactive, 1, 8),
+            Tier.DOCKER: engine_backend(Tier.DOCKER, batch_tier, 4, 64),
             Tier.SERVERLESS: Backend(Tier.SERVERLESS, elastic_run, capacity=16),
         },
         policy=StraightLinePolicy(Thresholds(F=args.F, D=args.D)),
@@ -105,10 +137,13 @@ def main() -> None:
     wall = time.time() - t0
     if args.workers > 0:
         router.stop()
+    for lp in loops + [e for e in elastic if isinstance(e, EngineLoop)]:
+        lp.stop()
     m = router.metrics
     by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
     mode = f"{args.workers} workers/tier" if args.workers > 0 else "serial poll loop"
-    print(f"{args.requests} requests in {wall:.1f}s ({mode}): {m.summary()}")
+    batching = "serialized generate" if args.serialized else "continuous-batching loops"
+    print(f"{args.requests} requests in {wall:.1f}s ({mode}, {batching}): {m.summary()}")
     print(f"placement: {by_tier}")
 
 

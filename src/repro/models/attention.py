@@ -104,10 +104,6 @@ def paged_kv_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int, n_heads
     KV = min(cfg.n_kv_heads, H)
     if cfg.kv_quant:
         raise NotImplementedError("paged KV cache does not support int8 KV yet")
-    if cfg.logit_softcap:
-        # the paged decode path (kernel and ref) has no softcap; refusing at
-        # construction keeps the dense/paged token-parity contract honest
-        raise NotImplementedError("paged decode does not support logit_softcap yet")
     shape = (num_pages, KV, page_size, cfg.hd)
     return {
         "k": jax.ShapeDtypeStruct(shape, cfg.compute_dtype),
@@ -134,15 +130,20 @@ def paged_cache_kv(cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array,
     return out
 
 
-def paged_write_prompt(cache: Mapping, k: jax.Array, v: jax.Array, tab_row: jax.Array) -> dict:
+def paged_write_prompt(
+    cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array, tab_row: jax.Array
+) -> dict:
     """Write a whole prefilled prompt (1, Lp, KV, hd) through one sequence's
     block-table row (P,) into the pool; token t -> (tab_row[t//ps], t%ps).
     The scatter itself lives with the paged kernels (the decode gather's
-    write-side twin)."""
+    write-side twin): a Pallas kernel on the TPU path, the jnp ref oracle
+    otherwise."""
     from repro.kernels.paged_attention import ops as pa_ops
 
     out = dict(cache)
-    out["k"], out["v"] = pa_ops.paged_prefill_write(cache["k"], cache["v"], k, v, tab_row)
+    out["k"], out["v"] = pa_ops.paged_prefill_write(
+        cache["k"], cache["v"], k, v, tab_row, use_pallas=cfg.use_pallas
+    )
     return out
 
 
@@ -377,7 +378,7 @@ def self_attention(
         # truly paged prefill: K/V scatter straight through the block table
         # into the page pool — no dense per-length staging cache exists.
         assert cache is not None
-        new_cache = paged_write_prompt(cache, k, v, cache_index.tab_row)
+        new_cache = paged_write_prompt(cfg, cache, k, v, cache_index.tab_row)
         o = chunked_attention(cfg, q, k, v, pos_t, pos_t, causal=causal)
     elif mode == "prefill":
         assert cache is not None
@@ -392,6 +393,7 @@ def self_attention(
             q, new_cache["k"], new_cache["v"],
             cache_index.block_tab, cache_index.lengths + 1,
             use_pallas=cfg.use_pallas,
+            softcap=cfg.logit_softcap,
         )
     elif mode == "decode":
         assert cache is not None and cache_index is not None

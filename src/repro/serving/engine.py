@@ -35,20 +35,35 @@ additionally exports ``total_buckets`` so the placer can compute a warm
 fraction (``compile_events / total_buckets``) and steer traffic toward
 warmed-up tiers while another is still compiling.
 
-Thread-safety contract: each engine owns a reentrant ``lock`` that covers
-ALL state-mutating entry points — ``submit``, ``step``, ``generate``,
-``fork``, ``prewarm`` — i.e. the host-side bookkeeping (waiting queue,
-slots, page allocator/tables, compile-shape set) **and** the jitted device
-calls, which donate their cache buffers and therefore must never run
-concurrently. Callers from multiple threads may invoke those entry points
-freely; they serialize on the lock (the concurrent router's per-tier worker
-pools rely on exactly this). The read-only telemetry — ``capacity_now``,
+Thread-safety contract (loop-owned stepping): each engine owns a reentrant
+``lock`` covering ALL state-mutating entry points — ``submit``, ``step``,
+``generate``, ``fork``, ``prewarm`` — i.e. the host-side bookkeeping
+(waiting queue, slots, page allocator/tables, compile-shape set) **and** the
+jitted device calls, which donate their cache buffers and therefore must
+never run concurrently. The intended serving topology is *one stepper, many
+submitters*: a single ``serving.scheduler.EngineLoop`` background thread
+owns all ``step()`` calls, while any number of threads call ``submit`` —
+each step admits whatever has been submitted and decodes every active slot
+in ONE batched device call, so concurrent requests interleave inside the
+decode batch instead of serializing whole generations. There must be at
+most ONE stepper at a time: the lock keeps concurrent ``step`` /
+``generate`` calls memory-safe, but a ``step()`` returns finished sequences
+only to ITS caller — a second stepper (e.g. ``generate`` racing a running
+EngineLoop) can pop the other's completions, which then never reach that
+stepper's bookkeeping. ``generate`` is the synchronous convenience and the
+serialized benchmark baseline for an engine NOT owned by a loop, not the
+serving path. The read-only telemetry — ``capacity_now``,
 ``admission_capacity``, ``free_slots``, ``compile_events`` — is deliberately
 lock-free: it returns instantaneous, possibly-stale snapshots. Callers must
 NOT assume a capacity probe still holds by the time their request reaches
 the engine (admission re-checks under the lock), and must not touch engine
 internals (``waiting``, ``slot_seq``, ``allocator``, ``cache``) without
 holding ``lock``.
+
+Warm-up cost: every prefill-shape compile (bucket miss or ``prewarm``) is
+wall-timed into ``compile_ema_s``, an EMA exported via ``capacity_now()`` —
+the placer weighs warm-up gaps against it (a one-bucket gap on a tiny model
+is not worth a tier hop).
 """
 from __future__ import annotations
 
@@ -124,15 +139,30 @@ class _EngineBase:
         return bucket_tokens(n, self._bucket_unit, self._len_cap)
 
     def _pad_context(self, ctx_toks: List[int]):
-        """Right-pad a context to its bucket; returns (tokens, n_valid, Lp).
-        Records the shape so ``compile_events`` tracks distinct prefill
-        compilations (jit caches per shape, so #shapes == #compiles)."""
+        """Right-pad a context to its bucket; returns (tokens, n_valid, Lp,
+        fresh) where ``fresh`` marks a shape not executed before — the caller
+        wall-times that prefill into the compile-cost EMA. Records the shape
+        so ``compile_events`` tracks distinct prefill compilations (jit
+        caches per shape, so #shapes == #compiles)."""
         n = len(ctx_toks)
         Lp = self._bucket_len(n)
+        fresh = Lp not in self._prefill_shapes
         self._prefill_shapes.add(Lp)
         toks = np.zeros(Lp, np.int32)
         toks[:n] = ctx_toks
-        return toks, n, Lp
+        return toks, n, Lp, fresh
+
+    def _note_compile(self, dt_s: float) -> None:
+        """Fold one measured compile wall time into the EMA the placer reads
+        (``compile_ema_s`` in ``capacity_now()``)."""
+        prev = self._compile_ema_s
+        self._compile_ema_s = dt_s if prev is None else 0.5 * prev + 0.5 * dt_s
+
+    @property
+    def compile_ema_s(self) -> float:
+        """EMA of prefill-compile wall time; 0.0 until a compile is measured
+        (consumers treat 0 as unknown)."""
+        return self._compile_ema_s or 0.0
 
     @property
     def compile_events(self) -> int:
@@ -171,7 +201,9 @@ class _EngineBase:
                 slot = next((i for i, s in enumerate(self.slot_seq) if s is None), None)
                 if slot is None:
                     break
+                t0 = time.perf_counter()
                 self._prewarm_shape(Lp, slot)
+                self._note_compile(time.perf_counter() - t0)
                 self._prefill_shapes.add(Lp)
                 warmed.append(Lp)
             return warmed
@@ -184,9 +216,12 @@ class _EngineBase:
         )
 
     def generate(self, prompts: List[List[int]], max_steps: int = 10000) -> List[Sequence]:
-        """Synchronous convenience: run until all prompts finish. Holds the
-        engine lock end-to-end, so concurrent callers (the router's worker
-        pools) serialize whole generations rather than interleaving steps."""
+        """Synchronous convenience AND the serialized benchmark baseline:
+        runs until all prompts finish while holding the engine lock
+        end-to-end, so concurrent callers serialize whole generations. The
+        serving path is ``serving.scheduler.EngineLoop`` — submit into its
+        shared step loop and concurrent requests interleave in one decode
+        batch instead (benchmarks/continuous_batching.py measures the gap)."""
         with self.lock:
             done: List[Sequence] = []
             for p in prompts:
@@ -208,6 +243,7 @@ class InferenceEngine(_EngineBase):
         self._max_new, self._eos, self._len_cap = ecfg.max_new_tokens, ecfg.eos_id, ecfg.max_len
         self._bucket_unit, self._bucket_on = ecfg.bucket_unit, ecfg.bucket_prefill
         self._prefill_shapes = set()
+        self._compile_ema_s: Optional[float] = None
         self.lock = threading.RLock()
         B, L = ecfg.max_slots, ecfg.max_len
         self.cache = self.model.init_cache(B, L)
@@ -264,6 +300,7 @@ class InferenceEngine(_EngineBase):
             "waiting": len(self.waiting),
             "compile_events": self.compile_events,
             "total_buckets": self.total_buckets,
+            "compile_ema_s": self.compile_ema_s,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -284,10 +321,14 @@ class InferenceEngine(_EngineBase):
         for i in range(self.ecfg.max_slots):
             if self.slot_seq[i] is None and self.waiting:
                 seq = self.waiting.popleft()
-                toks, n, _ = self._pad_context(seq.prompt)
+                toks, n, _, fresh = self._pad_context(seq.prompt)
+                t0 = time.perf_counter()
                 nxt, self.cache = self._prefill(
                     self.params, self.cache, jnp.asarray(toks), jnp.asarray(i), jnp.asarray(n)
                 )
+                if fresh:
+                    jax.block_until_ready(nxt)
+                    self._note_compile(time.perf_counter() - t0)
                 self.slot_seq[i] = seq
                 self.slot_len[i] = n
                 self._last[i] = int(nxt)
@@ -382,6 +423,7 @@ class PagedInferenceEngine(_EngineBase):
         self._max_new, self._eos, self._len_cap = pcfg.max_new_tokens, pcfg.eos_id, pcfg.max_seq_len
         self._bucket_unit, self._bucket_on = pcfg.page_size, pcfg.bucket_prefill
         self._prefill_shapes = set()
+        self._compile_ema_s: Optional[float] = None
         self.lock = threading.RLock()
         B, P = pcfg.max_slots, pcfg.table_width
         self.cache = self.model.init_paged_cache(B, pcfg.num_pages, pcfg.page_size)
@@ -462,6 +504,7 @@ class PagedInferenceEngine(_EngineBase):
             "waiting": len(self.waiting),
             "compile_events": self.compile_events,
             "total_buckets": self.total_buckets,
+            "compile_ema_s": self.compile_ema_s,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -510,7 +553,8 @@ class PagedInferenceEngine(_EngineBase):
         table.num_tokens = len(ctx_toks)
         self.tables[slot] = table
         self.block_tab[slot, :] = table.row(self.pcfg.table_width)
-        toks, n, _ = self._pad_context(ctx_toks)
+        toks, n, _, fresh = self._pad_context(ctx_toks)
+        t0 = time.perf_counter()
         nxt, self.cache = self._prefill(
             self.params,
             self.cache,
@@ -519,6 +563,9 @@ class PagedInferenceEngine(_EngineBase):
             jnp.asarray(slot),
             jnp.asarray(n),
         )
+        if fresh:
+            jax.block_until_ready(nxt)
+            self._note_compile(time.perf_counter() - t0)
         self.slot_seq[slot] = seq
         self.slot_len[slot] = n
         self._last[slot] = int(nxt)

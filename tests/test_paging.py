@@ -192,6 +192,101 @@ def test_paged_attention_kernel_matches_ref(lens):
     assert jnp.allclose(o_kernel, o_ref, atol=1e-5), float(jnp.max(jnp.abs(o_kernel - o_ref)))
 
 
+@pytest.mark.parametrize("softcap", [20.0, 5.0])
+def test_paged_attention_kernel_softcap_matches_ref(softcap):
+    """The decode kernel's gemma-style logit softcap must match the jnp
+    oracle (and differ from the uncapped scores — the cap is really on)."""
+    from repro.kernels.paged_attention.kernel import paged_attention_grouped
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    rng = np.random.default_rng(1)
+    B, KV, G, hd, ps, P, NP = 3, 2, 2, 16, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32) * 4.0
+    pk = jnp.asarray(rng.normal(size=(NP, KV, ps, hd)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(NP, KV, ps, hd)), jnp.float32)
+    perm = rng.permutation(np.arange(1, NP))[: B * P].reshape(B, P)
+    lens = jnp.asarray([7, 19, 30], jnp.int32)
+    tab = jnp.asarray(perm, jnp.int32)
+    o_kernel = paged_attention_grouped(q, pk, pv, tab, lens, interpret=True, softcap=softcap)
+    o_ref = paged_attention_ref(q, pk, pv, tab, lens, softcap=softcap)
+    o_uncapped = paged_attention_ref(q, pk, pv, tab, lens)
+    assert jnp.allclose(o_kernel, o_ref, atol=1e-5), float(jnp.max(jnp.abs(o_kernel - o_ref)))
+    assert not jnp.allclose(o_ref, o_uncapped, atol=1e-5), "softcap had no effect"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Lp,n_real", [(16, 2), (32, 3), (8, 1)])
+def test_paged_prefill_write_kernel_matches_ref(Lp, n_real, dtype):
+    """The Pallas prefill-write scatter lands exactly where the jnp ref
+    does: the sequence's real pages get the transposed K/V chunks, bucket
+    padding is absorbed by the null page, and every untouched page of the
+    pool is preserved bit-for-bit (input/output aliasing)."""
+    from repro.kernels.paged_attention.kernel import paged_prefill_write_grouped
+    from repro.kernels.paged_attention.ref import paged_prefill_write_ref
+
+    rng = np.random.default_rng(2)
+    KV, hd, ps, NP, P = 2, 16, 8, 12, 6
+    pool_k = jnp.asarray(rng.normal(size=(NP, KV, ps, hd)), jnp.float32).astype(dtype)
+    pool_v = jnp.asarray(rng.normal(size=(NP, KV, ps, hd)), jnp.float32).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(1, Lp, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, Lp, KV, hd)), jnp.float32)
+    real = rng.permutation(np.arange(1, NP))[:n_real]
+    tab = np.full(P, NULL_PAGE, np.int32)
+    tab[:n_real] = real
+    tab = jnp.asarray(tab)
+    rk, rv = paged_prefill_write_ref(pool_k, pool_v, k, v, tab)
+    gk, gv = paged_prefill_write_grouped(pool_k, pool_v, k, v, tab, interpret=True)
+    touched = np.zeros(NP, bool)
+    touched[np.asarray(real)] = True
+    # real pages carry the scattered prompt; the null page is garbage by
+    # contract (duplicate pad writes race) and excluded from parity
+    assert jnp.array_equal(jnp.asarray(gk)[touched], jnp.asarray(rk)[touched])
+    assert jnp.array_equal(jnp.asarray(gv)[touched], jnp.asarray(rv)[touched])
+    untouched = ~touched
+    untouched[NULL_PAGE] = False
+    assert jnp.array_equal(jnp.asarray(gk)[untouched], jnp.asarray(pool_k)[untouched])
+    assert jnp.array_equal(jnp.asarray(gv)[untouched], jnp.asarray(pool_v)[untouched])
+
+
+def test_paged_prefill_write_dispatch_ragged_falls_back():
+    """ops.paged_prefill_write: page-multiple prompts use the Pallas kernel,
+    ragged ones (bucketing off) the ref — both must agree with the ref."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention.ref import paged_prefill_write_ref
+
+    rng = np.random.default_rng(3)
+    KV, hd, ps, NP = 2, 8, 4, 8
+    pool = jnp.asarray(rng.normal(size=(NP, KV, ps, hd)), jnp.float32)
+    tab = jnp.asarray([3, 5, 0, 0], jnp.int32)
+    for Lp in (8, 7):                       # page multiple, then ragged
+        k = jnp.asarray(rng.normal(size=(1, Lp, KV, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, Lp, KV, hd)), jnp.float32)
+        gk, gv = pa_ops.paged_prefill_write(pool, pool, k, v, tab, use_pallas=True)
+        rk, rv = paged_prefill_write_ref(pool, pool, k, v, tab)
+        mask = np.zeros(NP, bool)
+        mask[[3, 5]] = True
+        assert jnp.array_equal(jnp.asarray(gk)[mask], jnp.asarray(rk)[mask]), Lp
+        assert jnp.array_equal(jnp.asarray(gv)[mask], jnp.asarray(rv)[mask]), Lp
+
+
+def test_softcap_dense_and_paged_engines_agree():
+    """Gemma-style logit softcap now serves paged: the paged engine must
+    emit exactly the dense engine's greedy tokens under softcap (regression
+    for the paged_kv_pool_defs NotImplementedError)."""
+    cfg = _smoke("smollm-360m").replace(logit_softcap=8.0)
+    dense = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=64, max_new_tokens=4))
+    d = dense.generate(PROMPTS)
+    paged = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=8, num_pages=17, max_slots=4, max_seq_len=64, max_new_tokens=4),
+        params=dense.params,
+    )
+    p = paged.generate(PROMPTS)
+    assert [s.out for s in d] == [s.out for s in p]
+    paged.allocator.check_invariants()
+    assert paged.allocator.used_pages == 0
+
+
 # ---------------------------------------------------------------------------
 # Paged engine v2
 # ---------------------------------------------------------------------------

@@ -46,6 +46,38 @@ def test_line18_everything_busy_goes_serverless():
     assert d.tier == Tier.SERVERLESS
 
 
+def test_warmup_gap_without_cost_prefers_warmer_tier():
+    """Bare-float warmup entries (no measured compile cost): the original
+    warm-preference behavior — a colder flask loses to a warmer docker."""
+    warm = {Tier.FLASK: 0.25, Tier.DOCKER: 1.0}
+    d = POL.place(req(size=1e5), f_t=100, flask_free=1, docker_free=1, warmup=warm)
+    assert d.tier == Tier.DOCKER
+
+
+def test_warmup_gap_cheaper_than_tier_hop_is_ignored():
+    """Measured compile cost below the hop price: the warmth gap is not
+    worth leaving the interactive tier (a one-bucket gap on a tiny model)."""
+    pol = StraightLinePolicy(Thresholds(F=1000, D=1e6), hop_cost_s=0.05)
+    warm = {
+        Tier.FLASK: {"warmth": 0.75, "compile_cost_s": 0.1},  # E[stall] = 0.025
+        Tier.DOCKER: 1.0,
+    }
+    d = pol.place(req(size=1e5), f_t=100, flask_free=1, docker_free=1, warmup=warm)
+    assert d.tier == Tier.FLASK
+
+
+def test_warmup_gap_with_expensive_compiles_still_hops():
+    """Same warmth gap but heavyweight compiles: E[stall] = (1-0.75)*10s
+    dwarfs the hop price, so the warmer batch tier wins."""
+    pol = StraightLinePolicy(Thresholds(F=1000, D=1e6), hop_cost_s=0.05)
+    warm = {
+        Tier.FLASK: {"warmth": 0.75, "compile_cost_s": 10.0},
+        Tier.DOCKER: 1.0,
+    }
+    d = pol.place(req(size=1e5), f_t=100, flask_free=1, docker_free=1, warmup=warm)
+    assert d.tier == Tier.DOCKER
+
+
 def test_place_all_consumes_availability():
     reqs = [req(rid=i, size=1e5) for i in range(5)]
     ds = POL.place_all(reqs, f_t=100, flask_free=2, docker_free=2)

@@ -237,6 +237,34 @@ def test_warmup_aware_placement_prefers_warm_tier():
     router.drain()
 
 
+def test_warmup_gap_weighted_by_measured_compile_cost():
+    """The router forwards each tier's compile-cost EMA with its warm
+    fraction: a warmth gap whose expected stall is cheaper than one tier
+    hop no longer pushes traffic off the interactive tier; an expensive
+    one still does."""
+    stats = {
+        Tier.FLASK: {"compile_events": 1, "total_buckets": 4, "compile_ema_s": 0.01},
+        Tier.DOCKER: {"compile_events": 4, "total_buckets": 4, "compile_ema_s": 0.01},
+    }
+    mk = lambda t, cap: Backend(
+        t, run=lambda req: "ok", capacity=cap, stats_fn=lambda: stats[t]
+    )
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: mk(Tier.FLASK, 1),
+            Tier.DOCKER: mk(Tier.DOCKER, 4),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: "s", capacity=8),
+        },
+        policy=_policy(),
+    )
+    # E[stall] = (1 - 1/4) * 10ms << hop cost: stay on the interactive tier
+    assert router.submit(Request(rid=0, arrival_t=0.0, data_size=100.0)) == Tier.FLASK
+    # same gap, heavyweight compiles: the hop pays for itself
+    stats[Tier.FLASK]["compile_ema_s"] = 10.0
+    assert router.submit(Request(rid=1, arrival_t=0.0, data_size=100.0)) == Tier.DOCKER
+    router.drain()
+
+
 # ---------------------------------------------------------------------------
 # Engine-backed soak: real paged JAX engines behind every tier
 # ---------------------------------------------------------------------------
