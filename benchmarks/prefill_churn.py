@@ -19,16 +19,12 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit
+from repro.core.telemetry import percentile
 
 PAGE = 4
 MAX_SEQ = 64
 LENGTHS = list(range(1, 19))     # 18 distinct prompt lengths
 NEW = 2
-
-
-def _percentile(xs, p):
-    s = sorted(xs)
-    return s[min(len(s) - 1, int(round(p / 100.0 * (len(s) - 1))))]
 
 
 def _serve_lengths(eng):
@@ -85,9 +81,9 @@ def main() -> None:
             results[key] = (eng.compile_events, ttfts)
             emit(
                 f"prefill_churn.{key}",
-                _percentile(ttfts, 50) * 1e6,
+                percentile(ttfts, 50) * 1e6,
                 f"compile_events={eng.compile_events};"
-                f"p99_ttft_us={_percentile(ttfts, 99) * 1e6:.0f};"
+                f"p99_ttft_us={percentile(ttfts, 99) * 1e6:.0f};"
                 f"lengths={len(LENGTHS)}",
             )
 

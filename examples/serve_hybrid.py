@@ -11,7 +11,10 @@ Tiers (DESIGN.md §2):
 Each engine is owned by a ``serving.scheduler.EngineLoop``: router workers
 submit into the shared step loop and block on per-request futures, so
 concurrent requests on one engine interleave inside a single decode batch
-(instead of serializing whole generations on the engine lock). Algorithm 1's
+(instead of serializing whole generations on the engine lock). Prefill is
+CHUNKED (``chunk_tokens=CHUNK``): a long prompt is absorbed a page-multiple
+chunk per step under the engines' token budget, so it cannot stall the
+interactive tier's decode batch for a whole prefill. Algorithm 1's
 S_F/S_D availability checks pull through a CapacityGauge fed by each
 engine's ``admission_capacity()`` (free slots bounded by free KV pages), and
 the loop's ``capacity_now()`` additionally exports batch occupancy + queue
@@ -32,15 +35,16 @@ from repro.serving.scheduler import EngineLoop
 CFG = get_config("smollm-360m", smoke=True).replace(attn_chunk=64)
 MAXLEN, NEW, PROMPT = 96, 8, 8
 PS = 16
+CHUNK = 32                    # chunked prefill: tokens absorbed per step
 
 t0 = time.time()
 interactive = PagedInferenceEngine(
     CFG, PagedEngineConfig(page_size=PS, num_pages=1 + MAXLEN // PS, max_slots=1,
-                           max_seq_len=MAXLEN, max_new_tokens=NEW)
+                           max_seq_len=MAXLEN, max_new_tokens=NEW, chunk_tokens=CHUNK)
 )
 batch_tier = PagedInferenceEngine(
     CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 4 * MAXLEN // PS, max_slots=8,
-                           max_seq_len=MAXLEN, max_new_tokens=NEW),
+                           max_seq_len=MAXLEN, max_new_tokens=NEW, chunk_tokens=CHUNK),
     params=interactive.params,
 )
 print(f"tiers ready in {time.time()-t0:.1f}s")
@@ -79,7 +83,8 @@ def elastic_run(req: Request):
         t = time.time()
         eng = PagedInferenceEngine(
             CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS,
-                                   max_slots=4, max_seq_len=MAXLEN, max_new_tokens=NEW),
+                                   max_slots=4, max_seq_len=MAXLEN, max_new_tokens=NEW,
+                                   chunk_tokens=CHUNK),
             params=interactive.params,
         )
         elastic_pool.append(EngineLoop(eng).start())
@@ -126,9 +131,11 @@ by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
 print("placement:", by_tier)
 print("live capacity after drain:", gauge.snapshot())
 print("batch tier occupancy gauge:", gauge.occupancy("docker"),
-      "steps:", batch_loop.steps)
+      "steps:", batch_loop.steps,
+      "prefill backlog:", gauge.prefill_backlog("docker"))
 for loop in [interactive_loop, batch_loop] + elastic_pool:
     loop.stop()
 assert m.total == N and m.failure_rate == 0.0
 print("OK — all requests served by real JAX paged engines through Algorithm 1,")
-print("     batched by shared step loops, with S_F/S_D read live from page pools")
+print("     batched by shared step loops with chunked (budgeted) prefill,")
+print("     with S_F/S_D read live from page pools")

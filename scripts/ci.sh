@@ -28,3 +28,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_models.py dense h
 # the serialized baseline — the step loop cannot silently regress to
 # serialized execution.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/continuous_batching.py --fast
+
+# Chunked-prefill smoke: asserts the max inter-token decode gap while a
+# max-length prompt prefills concurrently improves >= 2x with chunking on,
+# at identical greedy outputs on both engines — chunking cannot silently
+# regress to whole-prompt (head-of-line blocking) prefill.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/chunked_prefill.py --fast

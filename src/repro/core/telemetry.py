@@ -50,6 +50,16 @@ def queue_depth(stats: Optional[dict]) -> Optional[int]:
     return None if d is None else int(d)
 
 
+def prefill_backlog(stats: Optional[dict]) -> Optional[int]:
+    """Prompt tokens not yet absorbed by the engine's (chunked) prefill
+    phase from a ``capacity_now()``-style snapshot, or None when the
+    snapshot is missing or predates the chunked-prefill export."""
+    if not stats:
+        return None
+    b = stats.get("prefill_backlog_tokens")
+    return None if b is None else int(b)
+
+
 def warm_fraction(stats: Optional[dict]) -> Optional[float]:
     """Bucket-compilation progress in [0, 1] from a ``capacity_now()``-style
     snapshot: ``compile_events / total_buckets``. Returns None when the
@@ -145,6 +155,11 @@ class CapacityGauge:
         """Admitted-but-waiting depth behind ``name``'s step loop, or None."""
         return queue_depth(self.stats(name))
 
+    def prefill_backlog(self, name: str) -> Optional[int]:
+        """Unabsorbed prompt tokens behind ``name``'s chunked prefill, or
+        None when the stats probe does not export a backlog."""
+        return prefill_backlog(self.stats(name))
+
     def snapshot(self) -> Dict[str, int]:
         return {name: max(0, int(p())) for name, p in self._probes.items()}
 
@@ -195,5 +210,6 @@ class Metrics:
             "failure_rate": round(self.failure_rate, 4),
             "median_response_s": round(percentile(rts, 50), 4) if rts else float("nan"),
             "p95_response_s": round(percentile(rts, 95), 4) if rts else float("nan"),
+            "p99_response_s": round(percentile(rts, 99), 4) if rts else float("nan"),
             "mean_response_s": round(sum(rts) / len(rts), 4) if rts else float("nan"),
         }

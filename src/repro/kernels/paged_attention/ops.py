@@ -13,6 +13,7 @@ from repro.kernels.paged_attention.kernel import (
     paged_prefill_write_grouped,
 )
 from repro.kernels.paged_attention.ref import (
+    gather_kv,
     paged_attention_ref,
     paged_prefill_write_ref,
 )
@@ -20,8 +21,10 @@ from repro.kernels.paged_attention.ref import (
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-def paged_prefill_write(pool_k, pool_v, k, v, tab_row, use_pallas: bool = True):
-    """Scatter one prefilled prompt's K/V through its block-table row.
+def paged_prefill_write(pool_k, pool_v, k, v, tab_row, use_pallas: bool = True,
+                        offset=None):
+    """Scatter one prefilled prompt's (or prompt chunk's) K/V through its
+    block-table row.
 
     pool_k/pool_v: (num_pages, KV, ps, hd); k/v: (1, Lp, KV, hd) — Lp may be
     bucket-padded past the sequence's allocated pages, in which case
@@ -29,14 +32,42 @@ def paged_prefill_write(pool_k, pool_v, k, v, tab_row, use_pallas: bool = True):
     absorbed there (never read: the length mask kills those positions).
     Returns (new_pool_k, new_pool_v).
 
+    ``offset`` (scalar int32, page-multiple) makes this the CHUNKED prefill
+    write: chunk token t lands at absolute position offset + t, realized by
+    shifting the block-table row left by offset // ps pages before the
+    scatter — the kernels keep their token-t -> row[t // ps] contract
+    untouched. Row entries shifted past the table's end map to the reserved
+    null page 0, so a tail chunk whose bucket padding overruns the allocated
+    pages is absorbed exactly like whole-prompt bucket padding.
+
     The Pallas kernel requires Lp to be a page multiple (bucketed prefill
     always is); ragged lengths (bucketing off) fall back to the jnp ref."""
     ps = pool_k.shape[2]
     Lp = k.shape[1]
     tab = jnp.asarray(tab_row, jnp.int32)
+    if offset is not None:
+        P = tab.shape[0]
+        idx = jnp.asarray(offset, jnp.int32) // ps + jnp.arange(P, dtype=jnp.int32)
+        tab = jnp.where(idx < P, tab[jnp.clip(idx, 0, P - 1)], 0)  # 0 == null page
     if use_pallas and Lp % ps == 0:
         return paged_prefill_write_grouped(pool_k, pool_v, k, v, tab, interpret=_INTERPRET)
     return paged_prefill_write_ref(pool_k, pool_v, k, v, tab)
+
+
+def paged_gather_context(pool_k, pool_v, tab_row):
+    """Materialize one sequence's dense K/V context view from the page pool:
+    (num_pages, KV, ps, hd) x (P,) -> two (1, P*ps, KV, hd) arrays where
+    index t holds the token at logical position t (null-row entries carry
+    page-0 garbage — callers mask them out positionally).
+
+    This is the read-side of the chunked prefill: each chunk's queries
+    attend over every previously written position plus the chunk itself, so
+    the bounded-compilation contract holds (the gathered shape is fixed at
+    table_width * page_size regardless of how much context is live)."""
+    tab = jnp.asarray(tab_row, jnp.int32)[None, :]            # (1, P)
+    k = gather_kv(pool_k, tab)                                # (1, KV, P*ps, hd)
+    v = gather_kv(pool_v, tab)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
 
 
 def paged_attention(q, pool_k, pool_v, block_tab, lengths, use_pallas: bool = True,

@@ -6,6 +6,11 @@
 
 ``--workers N`` runs the concurrent router runtime (N worker threads per
 tier, bounded by each tier's capacity); 0 keeps the serial poll loop.
+``--chunk-tokens N`` enables chunked prefill on every engine tier: prompts
+are absorbed N tokens per step under ``--step-budget`` (0 = auto,
+2*chunk), so a long prompt landing on the interactive tier no longer
+stalls every decoding slot for its whole prefill (see
+benchmarks/chunked_prefill.py); 0 keeps whole-prompt prefill.
 Engine tiers serve through continuous-batching step loops
 (``serving.scheduler.EngineLoop``): router workers submit into a shared
 per-engine loop and block on per-request futures, so concurrent requests
@@ -40,6 +45,13 @@ def main() -> None:
                     help="compile all prefill buckets before accepting traffic")
     ap.add_argument("--serialized", action="store_true",
                     help="bypass the engine step loops (lock-holding generate baseline)")
+    ap.add_argument("--chunk-tokens", type=int, default=32,
+                    help="chunked prefill chunk size in tokens (0 = whole-prompt "
+                         "prefill; MoE archs: expert capacity competes per CHUNK, "
+                         "so greedy outputs can differ from whole-prompt prefill "
+                         "when capacity binds — use 0 for exact parity there)")
+    ap.add_argument("--step-budget", type=int, default=0,
+                    help="per-step prefill+decode token budget (0 = auto)")
     args = ap.parse_args()
 
     import numpy as np
@@ -52,15 +64,22 @@ def main() -> None:
     from repro.serving.scheduler import EngineLoop
 
     cfg = get_config(args.arch, smoke=True).replace(attn_chunk=64)
+
+    def ecfg(slots):
+        return EngineConfig(
+            max_slots=slots, max_len=96, max_new_tokens=args.max_new_tokens,
+            chunk_tokens=args.chunk_tokens, step_token_budget=args.step_budget,
+        )
+
     t0 = time.time()
-    interactive = InferenceEngine(cfg, EngineConfig(max_slots=1, max_len=96, max_new_tokens=args.max_new_tokens))
+    interactive = InferenceEngine(cfg, ecfg(1))
     params = interactive.params
     if args.weights_int8:
         cfg_q = cfg.replace(weights_int8=True)
         params = quantize_params(params)
-        interactive = InferenceEngine(cfg_q, EngineConfig(max_slots=1, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
+        interactive = InferenceEngine(cfg_q, ecfg(1), params=params)
         cfg = cfg_q
-    batch_tier = InferenceEngine(cfg, EngineConfig(max_slots=4, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
+    batch_tier = InferenceEngine(cfg, ecfg(4), params=params)
     print(f"tiers ready in {time.time()-t0:.1f}s (weights_int8={args.weights_int8})")
 
     if args.prewarm:
@@ -89,7 +108,7 @@ def main() -> None:
         with elastic_lock:             # one cold start even under concurrency
             if not elastic:
                 t = time.time()
-                eng = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=96, max_new_tokens=args.max_new_tokens), params=params)
+                eng = InferenceEngine(cfg, ecfg(2), params=params)
                 elastic.append(eng if args.serialized else EngineLoop(eng).start())
                 print(f"  [elastic cold start {time.time()-t:.1f}s]")
         if args.serialized:
@@ -143,7 +162,8 @@ def main() -> None:
     by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
     mode = f"{args.workers} workers/tier" if args.workers > 0 else "serial poll loop"
     batching = "serialized generate" if args.serialized else "continuous-batching loops"
-    print(f"{args.requests} requests in {wall:.1f}s ({mode}, {batching}): {m.summary()}")
+    prefill = f"chunked prefill ({args.chunk_tokens} tok)" if args.chunk_tokens else "whole-prompt prefill"
+    print(f"{args.requests} requests in {wall:.1f}s ({mode}, {batching}, {prefill}): {m.summary()}")
     print(f"placement: {by_tier}")
 
 

@@ -136,6 +136,84 @@ class DecoderLM:
         )
         return next_tokens(self.cfg, ctx, params, _last_valid(h, n_valid)), cache
 
+    def init_chunk_state(self):
+        """Zero recurrent carry for a chunked prefill (B=1): one leaf per
+        non-attention mixer, empty tree for attention-only models. The
+        engine threads this through ``prefill_chunk*`` calls and installs it
+        into the decode cache after the final chunk."""
+        return tf.init_chunk_state(self.cfg)
+
+    def prefill_chunk(self, ctx, params, batch: Mapping, cache, chunk_state):
+        """Dense resumable partial-context prefill of ONE slot's stripe.
+
+        batch: tokens (1, Cp) — one right-padded chunk; n_valid (1,) valid
+        tokens IN THIS CHUNK; offset scalar int32 — tokens already in cache
+        (chunk token t sits at absolute position offset + t, positions and
+        causal masks follow). cache: the slot's mini cache (B=1 leaves, full
+        capacity) — attention K/V is written at ``offset`` and the chunk
+        attends over the whole stripe by absolute position. chunk_state: the
+        recurrent carry from the previous chunk (``init_chunk_state()`` for
+        the first). Returns (next_token (1,), cache, chunk_state); only the
+        FINAL chunk's token (emitted from the chunk's last valid position)
+        is meaningful."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        n_valid = batch.get("n_valid")
+        offset = jnp.asarray(batch["offset"], jnp.int32)
+        pos = self._positions(B, S, offset)
+        cidx = attn_mod.ChunkPrefillIndex(offset=offset)
+        h, cache, chunk_state, _ = tf.forward(
+            self.cfg, ctx, params, tokens=tokens, positions=pos,
+            mode="prefill", cache=cache, cache_index=cidx, n_valid=n_valid,
+            chunk_state=chunk_state,
+        )
+        return next_tokens(self.cfg, ctx, params, _last_valid(h, n_valid)), cache, chunk_state
+
+    def prefill_chunk_paged(self, ctx, params, batch: Mapping, cache, chunk_state):
+        """Paged resumable partial-context prefill of ONE sequence.
+
+        Like ``prefill_chunk`` but against the shared page pool: batch
+        additionally carries tab_row (P,) — the sequence's FULL block-table
+        row — and slot (scalar). ``offset`` must be a page multiple (the
+        engine's chunk size is); the chunk's K/V scatters through the row
+        shifted to the offset (tail-chunk bucket padding past the table
+        lands on the null page) and its queries attend over the dense
+        gathered context view. Returns (next_token (1,), cache,
+        chunk_state)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        assert B == 1, "prefill_chunk_paged scatters through ONE block-table row; B must be 1"
+        n_valid = batch.get("n_valid")
+        offset = jnp.asarray(batch["offset"], jnp.int32)
+        pos = self._positions(B, S, offset)
+        cidx = attn_mod.PagedChunkPrefillIndex(
+            tab_row=jnp.asarray(batch["tab_row"], jnp.int32),
+            slot=jnp.asarray(batch["slot"], jnp.int32),
+            offset=offset,
+        )
+        h, cache, chunk_state, _ = tf.forward(
+            self.cfg, ctx, params, tokens=tokens, positions=pos,
+            mode="prefill", cache=cache, cache_index=cidx, n_valid=n_valid,
+            chunk_state=chunk_state,
+        )
+        return next_tokens(self.cfg, ctx, params, _last_valid(h, n_valid)), cache, chunk_state
+
+    def install_chunk_state(self, cache, chunk_state, slot):
+        """Write a completed chunked prefill's recurrent carry into the
+        decode cache at ``slot`` (leaves are (n_sb, B, ...); the carry is
+        (n_sb, 1, ...)). Attention K/V needs no install — chunks wrote the
+        cache/pool directly."""
+        blocks = dict(cache["blocks"])
+        for key, part in chunk_state["blocks"].items():
+            blocks[key] = jax.tree.map(
+                lambda full, p: jax.lax.dynamic_update_slice_in_dim(
+                    full, p.astype(full.dtype), jnp.asarray(slot, jnp.int32), axis=1
+                ),
+                blocks[key],
+                part,
+            )
+        return {**cache, "blocks": blocks}
+
     def decode(self, ctx, params, cache, batch: Mapping):
         tok = batch["token"]
         B, S = tok.shape

@@ -98,6 +98,38 @@ class PagedPrefillIndex(NamedTuple):
     slot: jax.Array
 
 
+class ChunkPrefillIndex(NamedTuple):
+    """Chunked (resumable) dense prefill of one slot's cache stripe.
+
+    offset: scalar int32 — tokens already in cache when this chunk starts;
+    chunk token t lives at absolute position offset + t. The chunk's K/V is
+    written at ``offset`` and its queries attend causally over the WHOLE
+    stripe by absolute position, so positions written by earlier chunks stay
+    visible while unwritten/stale positions (> offset + t) are masked out.
+    Recurrent-mixer state does NOT live in the cache mid-prefill — it rides
+    the explicit ``chunk_state`` carry (see transformer.forward) so decode
+    steps batched between chunks cannot corrupt it.
+    """
+
+    offset: jax.Array
+
+
+class PagedChunkPrefillIndex(NamedTuple):
+    """Chunked (resumable) paged prefill of one sequence.
+
+    tab_row: (P,) int32 — the sequence's full block-table row.
+    slot: scalar int32 — decode-batch slot (recurrent-state install target).
+    offset: scalar int32 — page-multiple chunk start; the chunk's K/V
+    scatters through the row shifted by offset // ps pages (tail overruns
+    land on the null page), and its queries attend over the dense gathered
+    context view masked by absolute position.
+    """
+
+    tab_row: jax.Array
+    slot: jax.Array
+    offset: jax.Array
+
+
 def paged_kv_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int, n_heads: int = 0) -> dict:
     """ShapeDtypeStructs for one attention layer's shared page pool."""
     H = n_heads or cfg.n_heads
@@ -131,18 +163,21 @@ def paged_cache_kv(cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array,
 
 
 def paged_write_prompt(
-    cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array, tab_row: jax.Array
+    cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array, tab_row: jax.Array,
+    offset=None,
 ) -> dict:
-    """Write a whole prefilled prompt (1, Lp, KV, hd) through one sequence's
-    block-table row (P,) into the pool; token t -> (tab_row[t//ps], t%ps).
-    The scatter itself lives with the paged kernels (the decode gather's
-    write-side twin): a Pallas kernel on the TPU path, the jnp ref oracle
-    otherwise."""
+    """Write a whole prefilled prompt — or, with ``offset``, one prompt
+    chunk — (1, Lp, KV, hd) through one sequence's block-table row (P,) into
+    the pool; chunk token t -> absolute position offset + t (offset is a
+    page multiple; tail-chunk padding past the table lands on the null
+    page). The scatter itself lives with the paged kernels (the decode
+    gather's write-side twin): a Pallas kernel on the TPU path, the jnp ref
+    oracle otherwise."""
     from repro.kernels.paged_attention import ops as pa_ops
 
     out = dict(cache)
     out["k"], out["v"] = pa_ops.paged_prefill_write(
-        cache["k"], cache["v"], k, v, tab_row, use_pallas=cfg.use_pallas
+        cache["k"], cache["v"], k, v, tab_row, use_pallas=cfg.use_pallas, offset=offset
     )
     return out
 
@@ -238,11 +273,15 @@ def chunked_attention(
     pos_q: jax.Array,       # (B, S) int32
     pos_k: jax.Array,       # (B, T) int32
     causal: bool = True,
+    allow_kernel: bool = True,
 ) -> jax.Array:
-    """Query-chunked attention; returns (B, S, H, hd)."""
+    """Query-chunked attention; returns (B, S, H, hd). ``allow_kernel=False``
+    forces the jnp path — the flash kernel assumes square causal q/k of equal
+    length, which the chunked-prefill context attention (short q over a long
+    cached prefix at an absolute-position offset) violates."""
     B, S, H, hd = q.shape
     KV = k.shape[2]
-    if cfg.use_pallas and causal and S > 1:
+    if cfg.use_pallas and causal and S > 1 and allow_kernel and S == k.shape[1]:
         from repro.kernels.flash_attention import ops as fa_ops
 
         return fa_ops.flash_attention(q, k, v, pos_q, pos_k)
@@ -272,6 +311,24 @@ def chunked_attention(
     _, o = jax.lax.scan(body, None, (qc, pc))
     o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
     return o
+
+
+def context_attention(
+    cfg: ModelConfig,
+    q: jax.Array,           # (B, Cq, H, hd) — one prefill chunk's queries
+    k: jax.Array,           # (B, T, KV, hd) — the full cached context view
+    v: jax.Array,
+    pos_q: jax.Array,       # (B, Cq) absolute positions (offset + arange)
+) -> jax.Array:
+    """Chunked-prefill attention: a chunk of queries over the whole cached
+    context (earlier chunks + this chunk, freshly written), masked causally
+    by ABSOLUTE position — key t is visible to query at position p iff
+    t <= p, which simultaneously exposes the valid prefix, enforces
+    causality inside the chunk, and hides unwritten/stale cache positions
+    and tail-chunk bucket padding (all strictly in the future)."""
+    B, T = k.shape[0], k.shape[1]
+    pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :], (B, T))
+    return chunked_attention(cfg, q, k, v, pos_q, pos_k, causal=True, allow_kernel=False)
 
 
 def decode_attention_quant(cfg: ModelConfig, q: jax.Array, cache: Mapping, cache_len) -> jax.Array:
@@ -380,6 +437,27 @@ def self_attention(
         assert cache is not None
         new_cache = paged_write_prompt(cfg, cache, k, v, cache_index.tab_row)
         o = chunked_attention(cfg, q, k, v, pos_t, pos_t, causal=causal)
+    elif mode == "prefill" and isinstance(cache_index, PagedChunkPrefillIndex):
+        # chunked paged prefill: scatter this chunk at its page-aligned
+        # offset, then attend over the dense gathered context view (fixed
+        # table_width * ps shape — compilation stays offset-independent).
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        assert cache is not None
+        new_cache = paged_write_prompt(
+            cfg, cache, k, v, cache_index.tab_row, offset=cache_index.offset
+        )
+        ck, cv = pa_ops.paged_gather_context(
+            new_cache["k"], new_cache["v"], cache_index.tab_row
+        )
+        o = context_attention(cfg, q, ck.astype(x.dtype), cv.astype(x.dtype), pos_t)
+    elif mode == "prefill" and isinstance(cache_index, ChunkPrefillIndex):
+        # chunked dense prefill: write this chunk into the slot's stripe at
+        # ``offset`` and attend over the whole stripe by absolute position.
+        assert cache is not None
+        new_cache = cache_kv(cfg, cache, k, v, cache_index.offset)
+        ck, cv = read_kv(cfg, new_cache, x.dtype)
+        o = context_attention(cfg, q, ck, cv, pos_t)
     elif mode == "prefill":
         assert cache is not None
         new_cache = cache_kv(cfg, cache, k, v, 0 if cache_index is None else cache_index)

@@ -160,7 +160,10 @@ def mamba_mixer(
         if S % chunk != 0:
             chunk = S
         nc = S // chunk
-        h0 = jnp.zeros((B, dI, dS), jnp.float32)
+        # resume from the cached SSM state: zeros for a fresh prefill (every
+        # caller hands a zero cache), the carried state for a chunked
+        # prefill continuation (models/api.py prefill_chunk*)
+        h0 = cache["ssm"] if cache is not None else jnp.zeros((B, dI, dS), jnp.float32)
         if nc == 1:
             y, h_last = _chunk_scan(dt, Bc, Cc, A, xc, h0)
         else:

@@ -162,6 +162,31 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int, page_size: in
     )
 
 
+def chunk_state_defs(cfg: ModelConfig, batch: int = 1) -> dict:
+    """ShapeDtypeStructs for the chunked-prefill recurrent carry: one entry
+    per NON-attention mixer (attention chunks live directly in the KV
+    cache/pool). The carry is deliberately OUTSIDE the decode cache: while a
+    sequence is mid-prefill, batched decode steps for other slots still
+    sweep every slot's in-cache recurrent state with garbage updates — the
+    engine keeps the authoritative state here and installs it into the slot
+    only when the last chunk completes."""
+    per_sb: dict = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "mamba":
+            per_sb[f"l{i}_mixer"] = mam.mamba_cache_defs(cfg, batch)
+        elif kind == "mlstm":
+            per_sb[f"l{i}_mixer"] = xl.mlstm_cache_defs(cfg, batch)
+        elif kind == "slstm":
+            per_sb[f"l{i}_mixer"] = xl.slstm_cache_defs(cfg, batch)
+    return {"blocks": _stack_shape(per_sb, cfg.n_superblocks)}
+
+
+def init_chunk_state(cfg: ModelConfig, batch: int = 1) -> dict:
+    """Zero carry for the first chunk of a chunked prefill (fresh sequence);
+    attention-only models get an empty (leafless) tree."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), chunk_state_defs(cfg, batch))
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
@@ -192,8 +217,10 @@ def _superblock(
     enc_out,
     causal: bool,
     valid=None,
+    chunk_sb=None,
 ):
     new_cache: dict = {}
+    new_chunk: dict = {}
     aux = jnp.zeros((), jnp.float32)
     x = _constrain(ctx, x, cfg.seq_shard_activations)
     # Block loop-invariant code motion out of the layer scan: without the
@@ -204,10 +231,19 @@ def _superblock(
     p = _loop_barrier(p)
     if cache_sb is not None:
         cache_sb = _loop_barrier(cache_sb)
+    if chunk_sb is not None:
+        chunk_sb = _loop_barrier(chunk_sb)
     # Paged prefill: attention layers write straight through the sequence's
     # block-table row into the shared page pool; recurrent mixers run from a
     # zero state (a fresh sequence) and their final state lands in the slot.
     paged_pf = isinstance(cache_index, attn.PagedPrefillIndex)
+    # Chunked prefill: attention layers write this chunk at its offset;
+    # recurrent mixers resume from (and return) the explicit chunk_sb carry
+    # while the in-cache slot state is passed through untouched — the engine
+    # installs the carry only after the final chunk (see chunk_state_defs).
+    chunk_pf = isinstance(
+        cache_index, (attn.ChunkPrefillIndex, attn.PagedChunkPrefillIndex)
+    )
     recurrent = {"mamba": mam.mamba_mixer, "mlstm": xl.mlstm_mixer, "slstm": xl.slstm_mixer}
     for i, kind in enumerate(cfg.block_pattern):
         h = apply_norm(cfg, p[f"l{i}_norm"], x)
@@ -216,6 +252,11 @@ def _superblock(
             h, c_out = attn.self_attention(
                 cfg, p[f"l{i}_mixer"], h, positions, mode, c_in, cache_index, causal=causal
             )
+        elif chunk_pf and chunk_sb is not None:
+            s_in = chunk_sb[f"l{i}_mixer"]
+            h, s_out = recurrent[kind](cfg, p[f"l{i}_mixer"], h, mode, s_in, valid=valid)
+            new_chunk[f"l{i}_mixer"] = s_out
+            c_out = c_in
         elif paged_pf and c_in is not None:
             zero = jax.tree.map(lambda l: jnp.zeros((1,) + l.shape[1:], l.dtype), c_in)
             h, c_part = recurrent[kind](cfg, p[f"l{i}_mixer"], h, mode, zero, valid=valid)
@@ -251,7 +292,12 @@ def _superblock(
                 h = mlp(cfg, p[f"l{i}_ffn"], h)
             x = x + h
         x = _constrain(ctx, x, cfg.seq_shard_activations)
-    return x, (new_cache if cache_sb is not None else None), aux
+    return (
+        x,
+        (new_cache if cache_sb is not None else None),
+        (new_chunk if chunk_sb is not None else None),
+        aux,
+    )
 
 
 def _remat_wrap(cfg: ModelConfig, fn):
@@ -274,26 +320,47 @@ def run_stack(
     enc_out=None,
     causal: bool = True,
     valid=None,
+    chunk_state=None,
 ):
-    """Scan the superblock stack. Returns (x, new_cache, aux)."""
+    """Scan the superblock stack. Returns (x, new_cache, new_chunk_state,
+    aux); ``new_chunk_state`` is None unless ``chunk_state`` (the chunked
+    prefill recurrent carry, scanned alongside the cache) was given."""
     remat = mode == "train" and cfg.remat != "none"
 
     if cache is None:
         def body(carry, p_sb):
             xx, aux = carry
-            xx, _, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, None, cache_index, enc_out, causal, valid)
+            xx, _, _, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, None, cache_index, enc_out, causal, valid)
             return (xx, aux + a), None
 
         body = _remat_wrap(cfg, body) if remat else body
         (x, aux), _ = jax.lax.scan(
             body, (x, jnp.zeros((), jnp.float32)), blocks_params, unroll=cfg.scan_unroll
         )
-        return x, None, aux
+        return x, None, None, aux
+
+    if chunk_state is not None:
+        def body(carry, sb):
+            xx, aux = carry
+            p_sb, c_sb, s_sb = sb
+            xx, c_new, s_new, a = _superblock(
+                cfg, ctx, p_sb, xx, positions, mode, c_sb, cache_index, enc_out,
+                causal, valid, chunk_sb=s_sb,
+            )
+            return (xx, aux + a), (c_new, s_new)
+
+        body = _remat_wrap(cfg, body) if remat else body
+        (x, aux), (new_blocks, new_state) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (blocks_params, cache["blocks"], chunk_state["blocks"]),
+            unroll=cfg.scan_unroll,
+        )
+        return x, {"blocks": new_blocks}, {"blocks": new_state}, aux
 
     def body(carry, sb):
         xx, aux = carry
         p_sb, c_sb = sb
-        xx, c_new, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, c_sb, cache_index, enc_out, causal, valid)
+        xx, c_new, _, a = _superblock(cfg, ctx, p_sb, xx, positions, mode, c_sb, cache_index, enc_out, causal, valid)
         return (xx, aux + a), c_new
 
     body = _remat_wrap(cfg, body) if remat else body
@@ -301,7 +368,7 @@ def run_stack(
         body, (x, jnp.zeros((), jnp.float32)), (blocks_params, cache["blocks"]),
         unroll=cfg.scan_unroll,
     )
-    return x, {"blocks": new_blocks}, aux
+    return x, {"blocks": new_blocks}, None, aux
 
 
 def forward(
@@ -316,13 +383,18 @@ def forward(
     cache_index=None,
     enc_out=None,
     n_valid=None,
+    chunk_state=None,
 ) -> Tuple[jax.Array, Optional[Mapping], jax.Array]:
-    """Returns (hidden (B,S,d) post-final-norm, new_cache, moe_aux).
+    """Returns (hidden (B,S,d) post-final-norm, new_cache, moe_aux) — or,
+    when ``chunk_state`` is given (chunked prefill), the 4-tuple
+    (hidden, new_cache, new_chunk_state, moe_aux).
 
     ``n_valid`` (B,) marks right-padded prefill: tokens at positions >=
     n_valid[b] are padding and must be identity for every stateful update —
     causal attention ignores them for free, recurrent mixers and the MoE
-    router receive the derived ``valid`` mask."""
+    router receive the derived ``valid`` mask. (Chunked prefill caveat: the
+    MoE capacity competition is per-CHUNK, so expert drops can differ from a
+    whole-prompt prefill when capacity binds.)"""
     if inputs_embeds is not None:
         x = inputs_embeds.astype(cfg.compute_dtype)
     else:
@@ -333,9 +405,11 @@ def forward(
         nv = jnp.asarray(n_valid, jnp.int32).reshape(-1, 1)
         valid = jnp.arange(S, dtype=jnp.int32)[None, :] < nv
     x = _constrain(ctx, x)
-    x, new_cache, aux = run_stack(
+    x, new_cache, new_chunk, aux = run_stack(
         cfg, ctx, params["blocks"], x, positions, mode, cache, cache_index, enc_out,
-        valid=valid,
+        valid=valid, chunk_state=chunk_state,
     )
     x = apply_norm(cfg, params["final_norm"], x)
+    if chunk_state is not None:
+        return x, new_cache, new_chunk, aux
     return x, new_cache, aux

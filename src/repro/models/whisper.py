@@ -52,7 +52,7 @@ def encode(cfg: ModelConfig, ctx, params: Mapping, frames: jax.Array) -> jax.Arr
     B, T, _ = frames.shape
     pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
     x = frames.astype(ecfg.compute_dtype)
-    x, _, _ = run_stack(
+    x, _, _, _ = run_stack(
         ecfg, ctx, params["encoder"]["blocks"], x, pos,
         "train", cache=None, causal=False,
     )

@@ -27,6 +27,28 @@ token-for-token identical to unbucketed. ``compile_events`` — the number of
 distinct prefill shapes executed — is exported through ``capacity_now()``
 so the placer and telemetry can see warm-up state.
 
+Chunked prefill + the per-step token budget: with ``chunk_tokens > 0`` a
+prompt is no longer absorbed in one device call. Admission merely reserves
+capacity (a slot; for the paged engine also the full context's pages) and
+puts the slot in the PREFILLING state — a chunk cursor, the context being
+absorbed, and an OFF-CACHE recurrent carry (models/api.py
+``prefill_chunk``/``prefill_chunk_paged``). Each ``step()`` then shares one
+token budget (``step_token_budget``, auto ``2*chunk_tokens``) between the
+decode batch (one token per decoding slot) and at-most-a-few prefill
+chunks, served FIFO by admission stamp with a one-chunk-per-step progress
+guarantee — so a 4k-token prompt is absorbed over many iterations while
+every decoding slot keeps emitting a token EVERY iteration, instead of
+stalling behind the whole prefill (and ``_admit`` running up to max_slots
+back-to-back full prefills). The final chunk installs the carry into the
+decode cache, emits the same greedy token the whole-prompt prefill would,
+and flips the slot to decoding under the unchanged stop conditions. With
+chunking OFF the same budget still caps full-prefill admissions per step
+(the first admission of each step is unconditional so nothing starves). Chunks reuse the bucket geometry capped at ``chunk_tokens``, so
+compilation stays bounded (the shape bound only shrinks); PREFILLING slots
+and remaining backlog tokens are exported through ``capacity_now()``
+(``prefilling_slots`` / ``prefill_backlog_tokens``) so the placer can see a
+tier digesting a long prompt.
+
 Warm-up: ``prewarm(buckets)`` compiles the prefill path for every bucket
 length (or a chosen subset) before traffic arrives, so the first real
 request of each shape pays a warm dispatch instead of an XLA compile.
@@ -57,8 +79,10 @@ serving path. The read-only telemetry — ``capacity_now``,
 lock-free: it returns instantaneous, possibly-stale snapshots. Callers must
 NOT assume a capacity probe still holds by the time their request reaches
 the engine (admission re-checks under the lock), and must not touch engine
-internals (``waiting``, ``slot_seq``, ``allocator``, ``cache``) without
-holding ``lock``.
+internals (``waiting``, ``slot_seq``, ``allocator``, ``cache``, the
+``_chunk*`` PREFILLING state) without holding ``lock``. The chunked-prefill
+state machine lives entirely inside ``step()`` under the engine lock — the
+EngineLoop needs no new entry points to interleave chunk work with decode.
 
 Warm-up cost: every prefill-shape compile (bucket miss or ``prewarm``) is
 wall-timed into ``compile_ema_s``, an EMA exported via ``capacity_now()`` —
@@ -97,6 +121,10 @@ class EngineConfig:
     eos_id: int = -1            # -1: never stop early
     bucket_unit: int = 16       # prefill pad quantum (the dense "page unit")
     bucket_prefill: bool = True # False: one prefill compile per distinct length
+    chunk_tokens: int = 0       # >0: chunked prefill, tokens per chunk (snapped
+                                # to a bucket_unit multiple; must divide max_len)
+    step_token_budget: int = 0  # per-step prefill+decode token budget
+                                # (0 = auto: 2*chunk_tokens chunked, max_len not)
 
 
 @dataclass
@@ -117,9 +145,13 @@ class _EngineBase:
     stop conditions (applied identically at admission and after decode so
     the dense/paged engines stay token-for-token interchangeable), prefill
     length bucketing with its compile-event accounting, bucket pre-warming,
-    and the synchronous generate loop. Subclasses provide ``step()`` /
-    ``_prewarm_shape()`` and set ``_max_new`` / ``_eos`` / ``_len_cap`` /
-    ``_bucket_unit`` / ``_bucket_on`` plus the reentrant ``lock`` (see the
+    the chunked-prefill (PREFILLING) state machine with its per-step token
+    budget, and the synchronous generate loop. Subclasses provide ``step()``
+    / ``_prewarm_shape()`` / ``_run_chunk_device()`` / ``_release_slot()``
+    and set ``_max_new`` / ``_eos`` / ``_len_cap`` / ``_bucket_unit`` /
+    ``_bucket_on`` / ``_chunk_tokens`` / ``_step_budget`` plus the per-slot
+    chunk state (``_chunking`` / ``_chunk_pos`` / ``_chunk_ctx`` /
+    ``_chunk_carry`` / ``_stamp``) and the reentrant ``lock`` (see the
     module docstring for the thread-safety contract)."""
 
     def free_slots(self) -> int:
@@ -133,19 +165,21 @@ class _EngineBase:
             return seq.sid
 
     # -- bucketed prefill shapes ---------------------------------------------
-    def _bucket_len(self, n: int) -> int:
+    def _bucket_len(self, n: int, cap: int = 0) -> int:
         if not self._bucket_on:
             return n
-        return bucket_tokens(n, self._bucket_unit, self._len_cap)
+        return bucket_tokens(n, self._bucket_unit, cap or self._len_cap)
 
-    def _pad_context(self, ctx_toks: List[int]):
-        """Right-pad a context to its bucket; returns (tokens, n_valid, Lp,
-        fresh) where ``fresh`` marks a shape not executed before — the caller
-        wall-times that prefill into the compile-cost EMA. Records the shape
-        so ``compile_events`` tracks distinct prefill compilations (jit
-        caches per shape, so #shapes == #compiles)."""
+    def _pad_context(self, ctx_toks: List[int], cap: int = 0):
+        """Right-pad a context to its bucket (capped at ``cap`` — the chunk
+        size for chunked prefill, the length cap otherwise); returns
+        (tokens, n_valid, Lp, fresh) where ``fresh`` marks a shape not
+        executed before — the caller wall-times that prefill into the
+        compile-cost EMA. Records the shape so ``compile_events`` tracks
+        distinct prefill compilations (jit caches per shape, so #shapes ==
+        #compiles)."""
         n = len(ctx_toks)
-        Lp = self._bucket_len(n)
+        Lp = self._bucket_len(n, cap)
         fresh = Lp not in self._prefill_shapes
         self._prefill_shapes.add(Lp)
         toks = np.zeros(Lp, np.int32)
@@ -171,11 +205,159 @@ class _EngineBase:
         return len(self._prefill_shapes)
 
     @property
+    def _shape_cap(self) -> int:
+        """Largest prefill shape this engine executes: the chunk size when
+        chunked prefill is on (whole prompts are absorbed chunk by chunk),
+        the length cap otherwise."""
+        return self._chunk_tokens or self._len_cap
+
+    @property
     def total_buckets(self) -> int:
         """How many distinct prefill shapes bucketing can produce (0 when
         bucketing is off — the shape count is then unbounded, so no warm
-        fraction exists)."""
-        return num_buckets(self._bucket_unit, self._len_cap) if self._bucket_on else 0
+        fraction exists). With chunked prefill on, shapes are capped at the
+        chunk size, so the bound only shrinks."""
+        return num_buckets(self._bucket_unit, self._shape_cap) if self._bucket_on else 0
+
+    @property
+    def step_budget(self) -> int:
+        """Per-step token budget shared by the decode batch and prefill
+        work. Auto (config 0): two chunks' worth when chunked prefill is on
+        (one chunk + headroom keeps decode gaps bounded at ~one chunk), one
+        max-length prefill's worth otherwise (caps back-to-back full
+        prefills per step without deferring moderate admissions)."""
+        if self._step_budget:
+            return self._step_budget
+        return 2 * self._chunk_tokens if self._chunk_tokens else self._len_cap
+
+    # -- chunked prefill state machine -----------------------------------------
+    def _resolve_chunking(self, cfg, chunk_tokens: int, unit: int, cap: int,
+                          require_divisible: bool) -> int:
+        """Validate + snap the chunk size: a positive multiple of the bucket
+        unit/page size, capped at the length cap. The dense engine requires
+        the cap to be a chunk multiple (its stripe writes would otherwise
+        clamp at the edge); the paged engine's tail overruns are absorbed by
+        the null page. Chunked prefill is decoder-only."""
+        if not chunk_tokens:
+            return 0
+        if getattr(cfg, "encoder", None) is not None:
+            raise ValueError("chunked prefill is decoder-only (no enc-dec support)")
+        ct = min(-(-chunk_tokens // unit) * unit, cap)
+        if require_divisible and cap % ct != 0:
+            raise ValueError(
+                f"chunk_tokens={ct} must divide the length cap {cap} "
+                f"(dense stripe writes cannot overrun the cache edge)"
+            )
+        return ct
+
+    def _init_chunk_slots(self, B: int) -> None:
+        """Per-slot PREFILLING state: chunk cursor, the full context being
+        absorbed, the off-cache recurrent carry (single owner for the field
+        group — both engines init and clear through here)."""
+        self._chunking = [False] * B
+        self._chunk_pos = np.zeros(B, np.int32)
+        self._chunk_ctx = [None] * B
+        self._chunk_carry = [None] * B
+
+    def _clear_chunk_slot(self, slot: int) -> None:
+        self._chunking[slot] = False
+        self._chunk_pos[slot] = 0
+        self._chunk_ctx[slot] = None
+        self._chunk_carry[slot] = None
+
+    def _begin_chunked(self, slot: int, seq: Sequence) -> None:
+        """Move ``seq`` into ``slot`` in the PREFILLING state: no device work
+        happens here — the budget-gated chunk phase (``_run_chunks``) absorbs
+        the context over the following steps. ``slot_len`` tracks the chunk
+        cursor so the batched decode's garbage write for this slot always
+        lands on a position the next chunk (or the first decode) rewrites."""
+        self.slot_seq[slot] = seq
+        self.slot_len[slot] = 0
+        self._chunking[slot] = True
+        self._chunk_pos[slot] = 0
+        self._chunk_ctx[slot] = seq.context_tokens()
+        self._chunk_carry[slot] = self.model.init_chunk_state()
+        self._stamp[slot] = self._stamp_next
+        self._stamp_next += 1
+
+    def _prefilling_slots(self) -> List[int]:
+        """PREFILLING slots in admission order (FIFO chunk service)."""
+        return sorted(
+            (i for i in range(len(self.slot_seq)) if self._chunking[i]),
+            key=lambda i: self._stamp[i],
+        )
+
+    def _next_chunk_cost(self, slot: int) -> int:
+        """Padded length of the slot's next chunk (budget accounting)."""
+        remaining = len(self._chunk_ctx[slot]) - int(self._chunk_pos[slot])
+        return self._bucket_len(min(remaining, self._chunk_tokens), self._chunk_tokens)
+
+    def _run_chunks(self, spent: int, budget: int) -> int:
+        """Budget-gated chunk phase: serve PREFILLING slots in admission
+        order, at most ``budget - spent`` further prefill tokens this step —
+        but ALWAYS at least one chunk when any slot is mid-prefill, so
+        prefill can never starve behind a saturated decode batch (and a
+        too-small budget degrades to one chunk per step, the design point:
+        decode gaps bounded at ~one chunk of work)."""
+        first = True
+        for slot in self._prefilling_slots():
+            while self._chunking[slot]:
+                cost = self._next_chunk_cost(slot)
+                if not first and spent + cost > budget:
+                    return spent
+                spent += cost
+                self._chunk_step(slot)
+                first = False
+        return spent
+
+    def _chunk_step(self, slot: int) -> None:
+        """Run ONE prefill chunk for a PREFILLING slot. The final chunk
+        installs the recurrent carry into the decode cache, emits the
+        prefill token (from the chunk's last valid position — identical to
+        the whole-prompt prefill's token) and transitions the slot to
+        decoding, applying the same stop conditions as unchunked
+        admission."""
+        seq = self.slot_seq[slot]
+        ctx = self._chunk_ctx[slot]
+        pos = int(self._chunk_pos[slot])
+        piece = ctx[pos : pos + self._chunk_tokens]
+        toks, n, _, fresh = self._pad_context(piece, cap=self._chunk_tokens)
+        t0 = time.perf_counter()
+        nxt = self._run_chunk_device(slot, toks, pos, n)
+        if fresh:
+            jax.block_until_ready(nxt)
+            self._note_compile(time.perf_counter() - t0)
+        new_pos = pos + n
+        self._chunk_pos[slot] = new_pos
+        self.slot_len[slot] = new_pos
+        if new_pos < len(ctx):
+            return                                    # mid-prefill: token is garbage
+        self.cache = self._install_carry(self.cache, self._chunk_carry[slot], jnp.asarray(slot))
+        self._clear_chunk_slot(slot)              # PREFILLING -> decoding
+        tok = int(nxt)
+        self._last[slot] = tok
+        seq.out.append(tok)
+        if self._stop_hit(seq, tok, int(self.slot_len[slot])):
+            # the prefill-emitted token can already cross a stop condition
+            seq.done = True
+            self._just_finished.append(seq)
+            self._release_slot(slot)
+
+    def prefill_backlog_tokens(self) -> int:
+        """Tokens of prompt context not yet absorbed: remaining chunk work
+        across PREFILLING slots plus queued (unadmitted) contexts. Lock-free
+        and possibly stale, like every capacity gauge."""
+        backlog = 0
+        for i in range(len(self.slot_seq)):
+            ctx = self._chunk_ctx[i]             # snapshot: the stepper may
+            if ctx is None:                      # null it out concurrently
+                continue
+            backlog += max(0, len(ctx) - int(self._chunk_pos[i]))
+        try:
+            backlog += sum(len(s.prompt) + len(s.out) for s in list(self.waiting))
+        except RuntimeError:
+            pass          # deque mutated mid-iteration: skip the stale part
+        return backlog
 
     def prewarm(self, buckets: Optional[List[int]] = None) -> List[int]:
         """Compile the prefill path for the given bucket lengths (default:
@@ -192,10 +374,10 @@ class _EngineBase:
             if buckets is None:
                 if not self._bucket_on:
                     return []
-                buckets = bucket_lengths(self._bucket_unit, self._len_cap)
+                buckets = bucket_lengths(self._bucket_unit, self._shape_cap)
             warmed: List[int] = []
             for Lp in sorted({int(b) for b in buckets}):
-                Lp = self._bucket_len(max(1, Lp))      # snap to a real bucket
+                Lp = self._bucket_len(max(1, Lp), self._shape_cap)  # snap to a real bucket
                 if Lp in self._prefill_shapes:
                     continue
                 slot = next((i for i, s in enumerate(self.slot_seq) if s is None), None)
@@ -242,6 +424,10 @@ class InferenceEngine(_EngineBase):
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
         self._max_new, self._eos, self._len_cap = ecfg.max_new_tokens, ecfg.eos_id, ecfg.max_len
         self._bucket_unit, self._bucket_on = ecfg.bucket_unit, ecfg.bucket_prefill
+        self._chunk_tokens = self._resolve_chunking(
+            cfg, ecfg.chunk_tokens, ecfg.bucket_unit, ecfg.max_len, require_divisible=True
+        )
+        self._step_budget = ecfg.step_token_budget
         self._prefill_shapes = set()
         self._compile_ema_s: Optional[float] = None
         self.lock = threading.RLock()
@@ -252,6 +438,9 @@ class InferenceEngine(_EngineBase):
         self.waiting: Deque[Sequence] = deque()
         self._sid = 0
         self._just_finished: List[Sequence] = []
+        self._init_chunk_slots(B)
+        self._stamp = np.zeros(B, np.int64)   # admission order (chunk FIFO)
+        self._stamp_next = 1
         self._build()
 
     # -- jitted steps ---------------------------------------------------------
@@ -283,9 +472,42 @@ class InferenceEngine(_EngineBase):
             batch = {"token": last_tokens[:, None], "cache_index": jnp.max(lens), "lengths": lens}
             return model.decode(ctx, params, cache, batch)
 
+        def prefill_chunk_slot(params, cache, tokens, slot, offset, n_valid, carry):
+            """One chunked-prefill step against the slot's stripe: slice the
+            mini cache out, run the resumable chunk (K/V written at
+            ``offset``, recurrent state rides ``carry``), write the stripe
+            back. Compiles once per chunk bucket — offset/slot/n_valid are
+            all dynamic."""
+            mini = jax.tree.map(
+                lambda full: jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1), cache
+            )
+            batch = {"tokens": tokens[None, :], "n_valid": n_valid[None], "offset": offset}
+            nxt, mini, carry = model.prefill_chunk(ctx, params, batch, mini, carry)
+
+            def write(full, part):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, part.astype(full.dtype), slot, axis=1
+                )
+
+            return nxt[0], jax.tree.map(write, cache, mini), carry
+
         self._prefill = jax.jit(prefill_slot)
         self._decode = jax.jit(decode_all, donate_argnums=(1,))
+        self._prefill_chunk = jax.jit(prefill_chunk_slot, donate_argnums=(1, 6))
+        self._install_carry = jax.jit(model.install_chunk_state, donate_argnums=(0,))
         self._last = np.zeros(B, np.int32)
+
+    def _run_chunk_device(self, slot: int, toks, offset: int, n: int):
+        nxt, self.cache, self._chunk_carry[slot] = self._prefill_chunk(
+            self.params,
+            self.cache,
+            jnp.asarray(toks),
+            jnp.asarray(slot),
+            jnp.asarray(offset),
+            jnp.asarray(n),
+            self._chunk_carry[slot],
+        )
+        return nxt
 
     # -- capacity telemetry ------------------------------------------------------
     def capacity_now(self) -> Dict[str, int]:
@@ -301,6 +523,9 @@ class InferenceEngine(_EngineBase):
             "compile_events": self.compile_events,
             "total_buckets": self.total_buckets,
             "compile_ema_s": self.compile_ema_s,
+            "prefilling_slots": sum(self._chunking),
+            "prefill_backlog_tokens": self.prefill_backlog_tokens(),
+            "chunk_tokens": self._chunk_tokens,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -309,44 +534,93 @@ class InferenceEngine(_EngineBase):
 
     # -- public API -------------------------------------------------------------
     def _prewarm_shape(self, Lp: int, slot: int) -> None:
-        """Compile (and discard) a prefill at shape ``Lp``: the dense prefill
+        """Compile (and discard) a prefill at shape ``Lp``. With chunked
+        prefill on, traffic runs the CHUNK path, so that is what gets
+        compiled — its stray writes land in a free slot's stripe, which is
+        causally masked for any future occupant. The plain dense prefill
         does not donate its cache argument, so dropping the returned cache
         leaves engine state untouched."""
         toks = np.zeros(Lp, np.int32)
+        if self._chunk_tokens:
+            _, self.cache, _ = self._prefill_chunk(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(slot),
+                jnp.asarray(0), jnp.asarray(1), self.model.init_chunk_state(),
+            )
+            return
         self._prefill(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(slot), jnp.asarray(1)
         )
 
-    def _admit(self) -> None:
+    def _release_slot(self, slot: int) -> None:
+        self.slot_seq[slot] = None
+        self.slot_len[slot] = 0
+        self._clear_chunk_slot(slot)
+        self._stamp[slot] = 0
+
+    def _admit(self, spent: int = 0, budget: int = 0) -> int:
+        """Budget-gated admission. Chunked: free slots become PREFILLING at
+        no device cost (the chunk phase spends the budget). Unchunked: the
+        FIRST prefill of a step is always admitted (progress guarantee — a
+        single long prompt must not starve behind a busy decode batch), but
+        every further one must fit ``budget`` — a queue burst can no longer
+        run up to max_slots full back-to-back device prefills in one
+        iteration while every active sequence stalls. Returns the updated
+        spend. (Called bare — budget 0 — it resolves ``step_budget``.)"""
+        budget = budget or self.step_budget
+        admitted = False
         for i in range(self.ecfg.max_slots):
-            if self.slot_seq[i] is None and self.waiting:
-                seq = self.waiting.popleft()
-                toks, n, _, fresh = self._pad_context(seq.prompt)
-                t0 = time.perf_counter()
-                nxt, self.cache = self._prefill(
-                    self.params, self.cache, jnp.asarray(toks), jnp.asarray(i), jnp.asarray(n)
-                )
-                if fresh:
-                    jax.block_until_ready(nxt)
-                    self._note_compile(time.perf_counter() - t0)
-                self.slot_seq[i] = seq
-                self.slot_len[i] = n
-                self._last[i] = int(nxt)
-                seq.out.append(int(nxt))
-                if self._stop_hit(seq, int(nxt), int(self.slot_len[i])):
-                    # the prefill-emitted token can already cross a stop
-                    # condition (max_new_tokens=1, or greedy EOS on prompt)
-                    seq.done = True
-                    self._just_finished.append(seq)
-                    self.slot_seq[i] = None
-                    self.slot_len[i] = 0
+            if self.slot_seq[i] is not None or not self.waiting:
+                continue
+            if self._chunk_tokens:
+                self._begin_chunked(i, self.waiting.popleft())
+                continue
+            Lp = self._bucket_len(len(self.waiting[0].prompt))
+            if admitted and spent + Lp > budget:
+                break                        # over budget: stays queued
+            seq = self.waiting.popleft()
+            toks, n, _, fresh = self._pad_context(seq.prompt)
+            t0 = time.perf_counter()
+            nxt, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(i), jnp.asarray(n)
+            )
+            if fresh:
+                jax.block_until_ready(nxt)
+                self._note_compile(time.perf_counter() - t0)
+            spent += Lp
+            admitted = True
+            self.slot_seq[i] = seq
+            self.slot_len[i] = n
+            self._last[i] = int(nxt)
+            seq.out.append(int(nxt))
+            if self._stop_hit(seq, int(nxt), int(self.slot_len[i])):
+                # the prefill-emitted token can already cross a stop
+                # condition (max_new_tokens=1, or greedy EOS on prompt)
+                seq.done = True
+                self._just_finished.append(seq)
+                self._release_slot(i)
+        return spent
 
     def step(self) -> List[Sequence]:
-        """Admit + one decode step; returns sequences finished this step."""
+        """Admit (budget-gated) + chunk work + one decode step; returns
+        sequences finished this step. PREFILLING slots are excluded from the
+        host-side decode bookkeeping — the batched device decode still
+        sweeps them, but its writes land on the chunk cursor (rewritten by
+        the next chunk) and the authoritative recurrent state rides the
+        off-cache carry until install."""
         with self.lock:
-            self._admit()
+            budget = self.step_budget
+            spent = sum(
+                1 for i, s in enumerate(self.slot_seq)
+                if s is not None and not self._chunking[i]
+            )
+            spent = self._admit(spent, budget)
+            if self._chunk_tokens:
+                self._run_chunks(spent, budget)
             finished, self._just_finished = self._just_finished, []
-            active = [i for i in range(self.ecfg.max_slots) if self.slot_seq[i] is not None]
+            active = [
+                i for i in range(self.ecfg.max_slots)
+                if self.slot_seq[i] is not None and not self._chunking[i]
+            ]
             if active:
                 lens = jnp.asarray(self.slot_len)
                 nxt, self.cache = self._decode(
@@ -361,8 +635,7 @@ class InferenceEngine(_EngineBase):
                     if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
                         seq.done = True
                         finished.append(seq)
-                        self.slot_seq[i] = None
-                        self.slot_len[i] = 0
+                        self._release_slot(i)
             return finished
 
 
@@ -380,6 +653,10 @@ class PagedEngineConfig:
     max_new_tokens: int = 32
     eos_id: int = -1
     bucket_prefill: bool = True  # pad prefill to power-of-two page buckets
+    chunk_tokens: int = 0        # >0: chunked prefill, tokens per chunk
+                                 # (snapped to a page multiple)
+    step_token_budget: int = 0   # per-step prefill+decode token budget
+                                 # (0 = auto: 2*chunk_tokens chunked, cap not)
 
     @property
     def table_width(self) -> int:
@@ -422,6 +699,11 @@ class PagedInferenceEngine(_EngineBase):
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
         self._max_new, self._eos, self._len_cap = pcfg.max_new_tokens, pcfg.eos_id, pcfg.max_seq_len
         self._bucket_unit, self._bucket_on = pcfg.page_size, pcfg.bucket_prefill
+        self._chunk_tokens = self._resolve_chunking(
+            cfg, pcfg.chunk_tokens, pcfg.page_size, pcfg.max_seq_len,
+            require_divisible=False,   # tail overruns land on the null page
+        )
+        self._step_budget = pcfg.step_token_budget
         self._prefill_shapes = set()
         self._compile_ema_s: Optional[float] = None
         self.lock = threading.RLock()
@@ -439,6 +721,7 @@ class PagedInferenceEngine(_EngineBase):
         self._stamp = np.zeros(B, np.int64)   # admission order, newest = max
         self._stamp_next = 1
         self._just_finished: List[Sequence] = []
+        self._init_chunk_slots(B)
         self._build()
 
     # -- jitted steps ---------------------------------------------------------
@@ -482,10 +765,40 @@ class PagedInferenceEngine(_EngineBase):
                     out_blocks[key] = jax.tree.map(copy_slot, cache["blocks"][key])
             return {"blocks": out_blocks}
 
+        def prefill_chunk_paged(params, cache, tokens, tab_row, slot, offset, n_valid, carry):
+            """One chunked-prefill step straight into the page pool: the
+            chunk's K/V scatters through the row at its page-aligned offset
+            and the recurrent state rides ``carry``. Compiles once per chunk
+            bucket — tab_row/slot/offset/n_valid are all dynamic."""
+            batch = {
+                "tokens": tokens[None, :],
+                "n_valid": n_valid[None],
+                "tab_row": tab_row,
+                "slot": slot,
+                "offset": offset,
+            }
+            nxt, cache, carry = model.prefill_chunk_paged(ctx, params, batch, cache, carry)
+            return nxt[0], cache, carry
+
         self._prefill = jax.jit(prefill_paged, donate_argnums=(1,))
         self._decode = jax.jit(decode_all, donate_argnums=(1,))
         self._copy_fork = jax.jit(copy_fork, donate_argnums=(0,))
+        self._prefill_chunk = jax.jit(prefill_chunk_paged, donate_argnums=(1, 7))
+        self._install_carry = jax.jit(model.install_chunk_state, donate_argnums=(0,))
         self._last = np.zeros(self.pcfg.max_slots, np.int32)
+
+    def _run_chunk_device(self, slot: int, toks, offset: int, n: int):
+        nxt, self.cache, self._chunk_carry[slot] = self._prefill_chunk(
+            self.params,
+            self.cache,
+            jnp.asarray(toks),
+            jnp.asarray(self.block_tab[slot]),
+            jnp.asarray(slot),
+            jnp.asarray(offset),
+            jnp.asarray(n),
+            self._chunk_carry[slot],
+        )
+        return nxt
 
     # -- capacity telemetry ------------------------------------------------------
     def free_pages(self) -> int:
@@ -505,6 +818,9 @@ class PagedInferenceEngine(_EngineBase):
             "compile_events": self.compile_events,
             "total_buckets": self.total_buckets,
             "compile_ema_s": self.compile_ema_s,
+            "prefilling_slots": sum(self._chunking),
+            "prefill_backlog_tokens": self.prefill_backlog_tokens(),
+            "chunk_tokens": self._chunk_tokens,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -520,9 +836,17 @@ class PagedInferenceEngine(_EngineBase):
         block-table row: K/V writes land on the reserved null page (garbage
         by design) and the idle slot's recurrent state is rewritten from
         zero on any real install. The cache is reassigned because the paged
-        prefill donates its buffer."""
+        prefill donates its buffer. With chunked prefill on, the CHUNK path
+        is what traffic runs, so that is what gets compiled."""
         toks = np.zeros(Lp, np.int32)
         row = np.full(self.pcfg.table_width, NULL_PAGE, np.int32)
+        if self._chunk_tokens:
+            _, self.cache, _ = self._prefill_chunk(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(row),
+                jnp.asarray(slot), jnp.asarray(0), jnp.asarray(1),
+                self.model.init_chunk_state(),
+            )
+            return
         _, self.cache = self._prefill(
             self.params,
             self.cache,
@@ -580,8 +904,22 @@ class PagedInferenceEngine(_EngineBase):
         self.slot_len[slot] = 0
         self.block_tab[slot, :] = NULL_PAGE
         self._stamp[slot] = 0
+        # a preempted PREFILLING slot drops its chunk progress: re-admission
+        # restarts the chunked prefill from scratch with a fresh zero carry
+        self._clear_chunk_slot(slot)
 
-    def _admit(self) -> None:
+    _release_slot = _release          # shared _chunk_step hook (see _EngineBase)
+
+    def _admit(self, spent: int = 0, budget: int = 0) -> int:
+        """Budget-gated page-gated admission (see the dense engine's
+        ``_admit`` for the budget contract — called bare, budget 0 resolves
+        ``step_budget``). Chunked: the new sequence's FULL context pages are
+        reserved up front (the growth-before-admission invariant still
+        holds — a decode token mid-prefill always lands on an allocated
+        page) and the slot enters PREFILLING; the chunk phase spends the
+        budget. Returns the updated spend."""
+        budget = budget or self.step_budget
+        admitted = False
         while self.waiting:
             slot = self._free_slot()
             if slot is None:
@@ -591,9 +929,22 @@ class PagedInferenceEngine(_EngineBase):
             need = PageTable.pages_needed(ctx_len + 1, self.pcfg.page_size)
             if not self.allocator.can_alloc(need):
                 break                                    # page-gated admission
+            if self._chunk_tokens:
+                self.waiting.popleft()
+                table = PageTable(self.pcfg.page_size, self.allocator.alloc(need))
+                table.num_tokens = ctx_len
+                self.tables[slot] = table
+                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+                self._begin_chunked(slot, seq)
+                continue
+            Lp = self._bucket_len(ctx_len)
+            if admitted and spent + Lp > budget:
+                break                                    # over budget: stays queued
             self.waiting.popleft()
             table = PageTable(self.pcfg.page_size, self.allocator.alloc(need))
             nxt = self._install(slot, seq, table)
+            spent += Lp
+            admitted = True
             seq.out.append(nxt)
             if self._stop_hit(seq, nxt, int(self.slot_len[slot])):
                 # the (re-)prefill-emitted token can already cross a stop
@@ -602,6 +953,7 @@ class PagedInferenceEngine(_EngineBase):
                 seq.done = True
                 self._just_finished.append(seq)
                 self._release(slot)
+        return spent
 
     def _preempt_newest(self, active: List[int]) -> int:
         """Evict the most recently admitted active sequence back to the
@@ -637,17 +989,34 @@ class PagedInferenceEngine(_EngineBase):
                         break
 
     def step(self) -> List[Sequence]:
-        """Grow + admit + one decode step; returns sequences finished.
-        Growth runs first so admission can't grab the last pages only for
-        the freshly prefilled sequence to be preempted in the same step —
-        admitted sequences are already growth-covered (ceil((ctx+1)/ps))."""
+        """Grow + admit (budget-gated) + chunk work + one decode step;
+        returns sequences finished. Growth runs first so admission can't
+        grab the last pages only for the freshly prefilled sequence to be
+        preempted in the same step — admitted sequences are already
+        growth-covered (ceil((ctx+1)/ps)), PREFILLING ones trivially so
+        (their full-context pages are reserved at admission, and they are
+        preemption candidates like any other occupant). PREFILLING slots
+        are excluded from the host-side decode bookkeeping; the batched
+        device decode still sweeps them, but its scatter lands on the chunk
+        cursor's (allocated) page and is rewritten by the next chunk, and
+        the authoritative recurrent state rides the off-cache carry until
+        install."""
         with self.lock:
-            self._ensure_growth(
-                [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
+            budget = self.step_budget
+            occupied = [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
+            self._ensure_growth(occupied)
+            spent = sum(
+                1 for i, s in enumerate(self.slot_seq)
+                if s is not None and not self._chunking[i]
             )
-            self._admit()
+            spent = self._admit(spent, budget)
+            if self._chunk_tokens:
+                self._run_chunks(spent, budget)
             finished, self._just_finished = self._just_finished, []
-            active = [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
+            active = [
+                i for i in range(self.pcfg.max_slots)
+                if self.slot_seq[i] is not None and not self._chunking[i]
+            ]
             self.peak_active = max(self.peak_active, len(active))
             if active:
                 nxt, self.cache = self._decode(
@@ -681,6 +1050,10 @@ class PagedInferenceEngine(_EngineBase):
             )
             dst = self._free_slot()
             if src is None or dst is None:
+                return None
+            if self._chunking[src]:
+                # mid-prefill: the authoritative recurrent state is in the
+                # off-cache carry, not the slot — nothing coherent to clone
                 return None
             try:
                 new_table = self.tables[src].fork(self.allocator)

@@ -9,7 +9,12 @@ under the engine lock, runs one batched ``step()`` across every active slot,
 and resolves finished sequences into per-sid futures. Concurrent requests
 therefore interleave inside a single decode batch instead of serializing
 whole generations on the engine lock (the pre-loop ``generate`` contract),
-so a tier's usable capacity really is ``max_slots``, not 1.
+so a tier's usable capacity really is ``max_slots``, not 1. With chunked
+prefill enabled on the engine (``chunk_tokens``), each iteration further
+interleaves budgeted prefill CHUNK work with the decode batch inside
+``engine.step()`` — a long prompt is absorbed over many loop iterations
+while decoding slots emit a token every iteration, and the remaining
+``prefill_backlog_tokens`` is exported through ``capacity_now()``.
 
 The router integration is two-phase: ``Backend.submit_fn`` enqueues into the
 loop and returns a ticket, ``Backend.wait_fn`` blocks on it — the router
@@ -28,6 +33,7 @@ work queued).
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, List, Optional
 
 from repro.serving.engine import Sequence
@@ -148,9 +154,44 @@ class EngineLoop:
 
     def generate(self, prompts: List[List[int]], timeout: Optional[float] = None) -> List[Sequence]:
         """Drop-in for ``engine.generate``: submit all, wait all — but through
-        the shared step loop, so concurrent callers interleave."""
-        sids = [self.submit(p) for p in prompts]
-        return [self.wait(s, timeout) for s in sids]
+        the shared step loop, so concurrent callers interleave. ``timeout``
+        is ONE overall deadline for the whole batch, shared across the
+        per-sid waits (waiting a full ``timeout`` per sid would make the
+        effective deadline N x the argument)."""
+        sids: List[int] = []
+        try:
+            for p in prompts:
+                sids.append(self.submit(p))
+        except Exception:
+            # a rejected prompt (e.g. too long for the engine) fails the
+            # whole batch: reap the siblings already registered, or their
+            # futures would sit in the registry forever (only wait() pops)
+            with self._lock:
+                for s in sids:
+                    fut = self._futures.pop(s, None)
+                    if fut is not None and not fut.event.is_set():
+                        self._abandoned.add(s)
+                    self._unclaimed.pop(s, None)
+            raise
+        deadline = None if timeout is None else time.monotonic() + timeout
+        out = []
+        for idx, s in enumerate(sids):
+            left = None if deadline is None else max(0.0, deadline - time.monotonic())
+            try:
+                out.append(self.wait(s, left))
+            except Exception:
+                # a failed batch is final for the WHOLE batch (shared
+                # deadline expired, loop poisoned or stopped): abandon the
+                # sids never waited on too, so their eventual results are
+                # discarded instead of growing the registry forever
+                with self._lock:
+                    for rest in sids[idx + 1 :]:
+                        fut = self._futures.pop(rest, None)
+                        if fut is not None and not fut.event.is_set():
+                            self._abandoned.add(rest)   # discard on finish
+                        self._unclaimed.pop(rest, None)
+                raise
+        return out
 
     # -- stepping --------------------------------------------------------------
     def step_once(self) -> List[Sequence]:
@@ -207,17 +248,25 @@ class EngineLoop:
     # -- capacity telemetry ------------------------------------------------------
     def capacity_now(self) -> dict:
         """Engine snapshot plus loop occupancy: ``active_slots`` (sequences
-        interleaved in the current decode batch), ``batch_occupancy`` (their
+        interleaved in the current decode batch — PREFILLING slots, which
+        occupy capacity but do not decode yet, are counted separately via
+        the engine's ``prefilling_slots``), ``batch_occupancy`` (their
         fraction of ``num_slots``), ``queue_depth`` (admitted-but-waiting),
-        ``loop_steps``. Lock-free, instantaneous — same staleness contract as
-        ``engine.capacity_now``."""
+        ``loop_steps``, and the engine's ``prefill_backlog_tokens`` — prompt
+        tokens not yet absorbed by the budgeted chunk phase, the signal that
+        a tier is digesting a long prompt. Lock-free, instantaneous — same
+        staleness contract as ``engine.capacity_now``."""
         snap = self.engine.capacity_now()
         total = max(1, snap.get("num_slots", 1))
-        active = snap.get("num_slots", 0) - snap.get("free_slots", 0)
+        occupied = snap.get("num_slots", 0) - snap.get("free_slots", 0)
+        # PREFILLING slots occupy capacity but are not decoding yet — they
+        # are reported via prefilling_slots, not inside the decode batch
+        active = max(0, occupied - snap.get("prefilling_slots", 0))
         snap["active_slots"] = active
         snap["batch_occupancy"] = active / total
         snap["queue_depth"] = snap.get("waiting", 0)
         snap["loop_steps"] = self.steps
+        snap.setdefault("prefill_backlog_tokens", 0)
         return snap
 
     def admission_capacity(self, est_tokens: int = 0) -> int:

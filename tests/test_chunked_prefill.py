@@ -1,0 +1,322 @@
+"""Chunked prefill in the step loop (the PREFILLING slot state).
+
+Covers the invariants the chunked admission state machine must not break:
+greedy-token parity with whole-prompt prefill on both engines across mixer
+families (incl. preemption-resume mid-prefill), the bounded-compilation
+contract (chunk shapes reuse the bucket geometry, bound unchanged), the
+decode-stall regression the feature exists for (active slots emit a token
+on EVERY loop iteration while a max-length prompt is chunk-prefilling,
+chunk work budget-gated), the capacity exports the placer consumes
+(``prefilling_slots`` / ``prefill_backlog_tokens``), and the two satellite
+bugfixes riding along: ``EngineLoop.generate`` applies ONE overall deadline
+across its waits, and ``Metrics.summary`` exposes ``p99_response_s``."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.serving.engine import (
+    EngineConfig,
+    InferenceEngine,
+    PagedEngineConfig,
+    PagedInferenceEngine,
+)
+from repro.serving.paging import num_buckets
+from repro.serving.scheduler import EngineLoop
+
+ARCHS = ["smollm-360m", "jamba-1.5-large-398b", "xlstm-350m"]
+MAXLEN, PS, CHUNK = 48, 8, 16
+
+
+def _smoke(arch):
+    cfg = get_config(arch, smoke=True).replace(attn_chunk=64)
+    if cfg.moe is not None:
+        # capacity drops are load-dependent (and chunk-local under chunked
+        # prefill); ample capacity => exact greedy either way
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+def _prompts(cfg, lengths, base=0):
+    return [
+        list(np.random.default_rng(base + i).integers(1, cfg.vocab_size, n))
+        for i, n in enumerate(lengths)
+    ]
+
+
+def _dense(cfg, chunk, params=None, new=3, maxlen=MAXLEN, slots=2):
+    return InferenceEngine(
+        cfg,
+        EngineConfig(max_slots=slots, max_len=maxlen, max_new_tokens=new,
+                     bucket_unit=PS, chunk_tokens=chunk),
+        params=params,
+    )
+
+
+def _paged(cfg, chunk, params=None, new=3, maxlen=MAXLEN, slots=2, pool_pages=None, ps=PS):
+    if pool_pages is None:
+        pool_pages = 2 * maxlen // ps
+    return PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=ps, num_pages=1 + pool_pages, max_slots=slots,
+                          max_seq_len=maxlen, max_new_tokens=new, chunk_tokens=chunk),
+        params=params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Greedy parity: chunking must not change a single token
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_matches_unchunked_greedy(arch):
+    """Mixed prompt lengths (sub-chunk, multi-chunk, ragged tail, max-ish)
+    through chunked engines produce exactly the whole-prompt-prefill tokens
+    on BOTH engines — attention offsets, recurrent carry hand-off and the
+    final-chunk token emission are all exact."""
+    cfg = _smoke(arch)
+    prompts = _prompts(cfg, [5, CHUNK, CHUNK + 7, 40])
+    ref = _dense(cfg, chunk=0)
+    base = [s.out for s in ref.generate(prompts)]
+    got_d = [s.out for s in _dense(cfg, CHUNK, ref.params).generate(prompts)]
+    assert got_d == base, "dense chunked prefill diverged from whole-prompt prefill"
+    eng_p = _paged(cfg, CHUNK, ref.params)
+    got_p = [s.out for s in eng_p.generate(prompts)]
+    assert got_p == base, "paged chunked prefill diverged from whole-prompt prefill"
+    eng_p.allocator.check_invariants()
+    assert eng_p.allocator.free_pages == eng_p.pcfg.num_pages - 1
+    assert all(not c for c in eng_p._chunking) and all(x is None for x in eng_p._chunk_carry)
+
+
+def test_chunked_preemption_resume_mid_prefill():
+    """A PREFILLING sequence is a preemption candidate like any occupant: a
+    growing decoder that runs the pool dry evicts it MID-prefill (chunk
+    progress and carry dropped, pages released); on re-admission the chunked
+    prefill restarts from scratch and still reproduces the exact greedy
+    continuation."""
+    cfg = _smoke("smollm-360m")
+    ps, maxlen, chunk, new = 4, 32, 4, 8
+    short, long_p = _prompts(cfg, [3, 20])
+    ref = _paged(cfg, 0, new=new, maxlen=maxlen, ps=ps)
+    base_short = ref.generate([short])[0].out
+    base_long = _paged(cfg, 0, ref.params, new=new, maxlen=maxlen, ps=ps).generate(
+        [long_p]
+    )[0].out
+
+    # 8 usable pages: short (grows to 3) + long (needs 6) collide mid-prefill
+    eng = _paged(cfg, chunk, ref.params, new=new, maxlen=maxlen, ps=ps, pool_pages=8)
+    sid_s = eng.submit(short)
+    for _ in range(2):
+        eng.step()
+    sid_l = eng.submit(long_p)
+    done, evicted_mid_prefill = {}, False
+    for _ in range(200):
+        chunking, pos = list(eng._chunking), eng._chunk_pos.copy()
+        for s in eng.step():
+            done[s.sid] = s
+        for i in range(2):
+            if chunking[i] and pos[i] > 0 and not eng._chunking[i] and eng.slot_seq[i] is None:
+                evicted_mid_prefill = True          # progress discarded, slot freed
+        if len(done) == 2:
+            break
+    assert len(done) == 2, "sequences did not finish after preemption"
+    assert done[sid_l].preemptions >= 1, "the long sequence was never preempted"
+    assert evicted_mid_prefill, "preemption never hit the sequence MID-prefill"
+    assert done[sid_s].out == base_short
+    assert done[sid_l].out == base_long, "resume after mid-prefill preemption diverged"
+    eng.allocator.check_invariants()
+    assert eng.allocator.free_pages == eng.pcfg.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Bounded compilation: chunk shapes reuse the bucket geometry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged"])
+def test_chunked_compile_count_bound_unchanged(kind):
+    """Serving many distinct prompt lengths through a chunked engine
+    compiles at most num_buckets(unit, chunk_tokens) prefill shapes — the
+    PR 2 bound, only with the cap shrunk to the chunk size (offsets and
+    chunk cursors are dynamic, never shapes)."""
+    cfg = _smoke("smollm-360m")
+    eng = _dense(cfg, CHUNK, new=2) if kind == "dense" else _paged(cfg, CHUNK, new=2)
+    bound = num_buckets(PS, CHUNK)
+    assert eng.total_buckets == bound
+    for n in range(1, 42, 4):                     # sub-chunk through multi-chunk
+        eng.generate([_prompts(cfg, [n], base=n)[0]])
+    assert eng.compile_events <= bound, (eng.compile_events, bound)
+
+
+def test_chunked_ragged_tail_without_bucketing():
+    """bucket_prefill=False: full chunks stay chunk-sized but the tail chunk
+    is ragged (paged: jnp-ref scatter fallback) — tokens still exact."""
+    cfg = _smoke("smollm-360m")
+    prompts = _prompts(cfg, [CHUNK + 5])
+    ref = _dense(cfg, 0)
+    base = [s.out for s in ref.generate(prompts)]
+    eng = PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS, max_slots=2,
+                          max_seq_len=MAXLEN, max_new_tokens=3, chunk_tokens=CHUNK,
+                          bucket_prefill=False),
+        params=ref.params,
+    )
+    assert [s.out for s in eng.generate(prompts)] == base
+
+
+def test_dense_chunk_must_divide_cap():
+    cfg = _smoke("smollm-360m")
+    with pytest.raises(ValueError, match="must divide"):
+        _dense(cfg, chunk=32, maxlen=MAXLEN)      # 48 % 32 != 0
+
+
+# ---------------------------------------------------------------------------
+# The decode-stall regression the feature exists for
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged"])
+def test_active_slots_decode_every_step_during_long_prefill(kind):
+    """While a max-length prompt is chunk-prefilling, the already-decoding
+    slot emits a token on EVERY loop iteration, the prefill spans multiple
+    iterations (absorbed, not swallowed whole), per-step chunk work respects
+    the token budget, and both outputs equal the whole-prefill baseline."""
+    cfg = _smoke("smollm-360m")
+    new = 12
+    short, long_p = _prompts(cfg, [4, MAXLEN - new - 1])
+    ref = _dense(cfg, 0, new=new)
+    base_short = ref.generate([short])[0].out
+    base_long = _dense(cfg, 0, ref.params, new=new).generate([long_p])[0].out
+
+    eng = (_dense if kind == "dense" else _paged)(cfg, CHUNK, ref.params, new=new)
+    loop = EngineLoop(eng)                         # stepped manually
+    sid_s = loop.submit(short)
+    for _ in range(2):
+        loop.step_once()
+    seq_s = next(s for s in eng.slot_seq if s is not None and s.sid == sid_s)
+    sid_l = loop.submit(long_p)
+    budget = eng.step_budget
+    done, prefill_steps = {}, 0
+    for _ in range(100):
+        n_before = len(seq_s.out)
+        pos_before = eng._chunk_pos.copy()
+        prefilling = any(eng._chunking)
+        for s in loop.step_once():
+            done[s.sid] = s
+        if prefilling or any(eng._chunking):
+            prefill_steps += 1
+            if sid_s not in done:
+                assert len(seq_s.out) == n_before + 1, (
+                    "decoding slot stalled during a chunked prefill iteration"
+                )
+            advanced = int((eng._chunk_pos - pos_before).clip(min=0).sum())
+            assert advanced <= budget, (
+                f"chunk work ({advanced} tokens) exceeded the step budget {budget}"
+            )
+        if len(done) == 2:
+            break
+    assert len(done) == 2
+    assert prefill_steps >= (MAXLEN - new - 1) // CHUNK, (
+        "the long prefill did not span multiple loop iterations"
+    )
+    assert done[sid_s].out == base_short
+    assert done[sid_l].out == base_long
+
+
+def test_capacity_exports_prefill_backlog():
+    """Engines export prefilling_slots / prefill_backlog_tokens; the
+    EngineLoop re-exports them (telemetry.prefill_backlog reads either)."""
+    from repro.core.telemetry import prefill_backlog
+
+    cfg = _smoke("smollm-360m")
+    eng = _paged(cfg, CHUNK, new=3)
+    loop = EngineLoop(eng)                         # not started: deterministic
+    long_p = _prompts(cfg, [40])[0]
+    sid = loop.submit(long_p)
+    snap = loop.capacity_now()
+    assert snap["prefill_backlog_tokens"] == len(long_p)   # still queued
+    loop.step_once()                               # admit + first chunk(s)
+    snap = loop.capacity_now()
+    assert snap["prefilling_slots"] == 1
+    assert snap["active_slots"] == 0, "a PREFILLING slot is not in the decode batch"
+    assert 0 < snap["prefill_backlog_tokens"] < len(long_p)
+    assert prefill_backlog(snap) == snap["prefill_backlog_tokens"]
+    for _ in range(40):
+        loop.step_once()
+        if not any(eng._chunking) and all(s is None for s in eng.slot_seq):
+            break
+    assert loop.capacity_now()["prefill_backlog_tokens"] == 0
+    assert len(loop.wait(sid, 0).out) == 3
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfixes riding along
+# ---------------------------------------------------------------------------
+
+
+def test_loop_generate_single_overall_deadline():
+    """generate(prompts, timeout=T) shares ONE deadline across its waits:
+    on a never-stepped loop with N prompts it fails after ~T, not ~N*T."""
+    cfg = _smoke("smollm-360m")
+    eng = _paged(cfg, 0, new=2)
+    loop = EngineLoop(eng)                         # never started/stepped
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError):
+        loop.generate(_prompts(cfg, [3, 3, 3, 3]), timeout=0.3)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 4 * 0.3, f"deadline multiplied across sids ({elapsed:.2f}s)"
+
+
+def test_loop_generate_timeout_abandons_unwaited_sids():
+    """A generate() batch whose shared deadline expires abandons EVERY sid —
+    including the ones never individually waited on — so their eventual
+    results are discarded instead of growing the registry forever."""
+    cfg = _smoke("smollm-360m")
+    eng = _paged(cfg, 0, new=2, slots=1)
+    loop = EngineLoop(eng)                         # stepped manually
+    with pytest.raises(TimeoutError):
+        loop.generate(_prompts(cfg, [3, 3, 3]), timeout=0.0)
+    assert not loop._futures, "unwaited sids left futures behind"
+    for _ in range(60):                            # let the work finish anyway
+        loop.step_once()
+        if all(s is None for s in eng.slot_seq) and not eng.waiting:
+            break
+    assert not loop._futures and not loop._unclaimed and not loop._abandoned
+    eng.allocator.check_invariants()
+
+
+def test_loop_generate_failed_submit_reaps_registered_sids():
+    """A batch whose LATER submit is rejected (prompt too long for the
+    engine) reaps the sibling futures already registered — the registry
+    must not grow when callers retry with corrected prompts."""
+    cfg = _smoke("smollm-360m")
+    eng = _paged(cfg, 0, new=2, slots=1)
+    loop = EngineLoop(eng)                         # stepped manually
+    too_long = _prompts(cfg, [MAXLEN])[0]          # prompt + new > max_seq_len
+    with pytest.raises(ValueError, match="max_seq_len"):
+        loop.generate([_prompts(cfg, [3])[0], too_long])
+    for _ in range(30):                            # sibling still runs; result discarded
+        loop.step_once()
+        if all(s is None for s in eng.slot_seq) and not eng.waiting:
+            break
+    assert not loop._futures and not loop._unclaimed and not loop._abandoned
+
+
+def test_metrics_summary_exports_p99():
+    from repro.core.telemetry import Metrics, percentile
+
+    class R:
+        def __init__(self, rt):
+            self.failed, self.response_s, self.tier = False, rt, None
+
+    m = Metrics()
+    rts = [float(i) for i in range(1, 101)]
+    for rt in rts:
+        m.record(R(rt))
+    s = m.summary()
+    assert s["p99_response_s"] == round(percentile(rts, 99), 4)
+    assert s["p95_response_s"] == round(percentile(rts, 95), 4)
