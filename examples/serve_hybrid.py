@@ -1,7 +1,9 @@
 """End-to-end driver (the paper's kind: serving): batched requests through
 the StraightLine router onto three REAL JAX inference backends — with the
-placer consuming LIVE capacity from the paged serving engines and every
-engine tier fronted by a continuous-batching step loop.
+placer consuming LIVE capacity from the paged serving engines, every
+engine tier fronted by a continuous-batching step loop, and the full
+observability stack on: per-request lifecycle traces, the process metrics
+registry, and a MonitorSampler time series per tier.
 
 Tiers (DESIGN.md §2):
   interactive — 1-slot paged engine, lowest latency, tiny page pool
@@ -20,14 +22,35 @@ engine's ``admission_capacity()`` (free slots bounded by free KV pages), and
 the loop's ``capacity_now()`` additionally exports batch occupancy + queue
 depth so telemetry sees true interleaved utilization.
 
+Observability (this run asserts all three outputs):
+  * every request carries a Trace from submit to settle — hedged copies
+    (``hedge_after_s``) share one trace and race on separate lanes; the
+    Chrome trace-event export lands at ``$TRACE_OUT`` (Perfetto-loadable);
+  * the metrics registry (placement counters, queue-wait / TTFT /
+    inter-token histograms) dumps Prometheus text at ``$METRICS_OUT``;
+  * a MonitorSampler sweeps each tier's ``capacity_now`` probe into
+    per-tier time series while the burst runs.
+
     PYTHONPATH=src python examples/serve_hybrid.py
 """
+import json
+import os
+import threading
 import time
 
 import numpy as np
 
+from repro.core import (
+    CapacityGauge,
+    MonitorSampler,
+    Request,
+    StraightLinePolicy,
+    Thresholds,
+    Tier,
+    Tracer,
+    default_registry,
+)
 from repro.configs.registry import get_config
-from repro.core import CapacityGauge, Request, StraightLinePolicy, Thresholds, Tier
 from repro.core.router import Backend, StraightLineRouter
 from repro.serving.engine import PagedEngineConfig, PagedInferenceEngine
 from repro.serving.scheduler import EngineLoop
@@ -36,6 +59,8 @@ CFG = get_config("smollm-360m", smoke=True).replace(attn_chunk=64)
 MAXLEN, NEW, PROMPT = 96, 8, 8
 PS = 16
 CHUNK = 32                    # chunked prefill: tokens absorbed per step
+TRACE_OUT = os.environ.get("TRACE_OUT", "/tmp/serve_hybrid_trace.json")
+METRICS_OUT = os.environ.get("METRICS_OUT", "/tmp/serve_hybrid_metrics.prom")
 
 t0 = time.time()
 interactive = PagedInferenceEngine(
@@ -57,8 +82,9 @@ print(f"batch tier: {batch_tier.capacity_now()}")
 
 # one continuous-batching step loop per engine: all device stepping happens
 # on the loop thread; submitters (router workers) only enqueue + wait
-interactive_loop = EngineLoop(interactive).start()
-batch_loop = EngineLoop(batch_tier).start()
+registry = default_registry()
+interactive_loop = EngineLoop(interactive, name="flask").start()
+batch_loop = EngineLoop(batch_tier, name="docker").start()
 
 # live capacity feedback: the placer sees each engine's measured admission
 # capacity (slots bounded by free pages), not a hardcoded constant — plus
@@ -69,7 +95,11 @@ gauge.register("docker", lambda: batch_tier.admission_capacity(PROMPT + NEW))
 gauge.register_stats("flask", interactive_loop.capacity_now)
 gauge.register_stats("docker", batch_loop.capacity_now)
 
+tracer = Tracer()
+sampler = MonitorSampler(gauge, interval_s=0.02, registry=registry).start()
+
 elastic_pool = []
+elastic_lock = threading.Lock()
 
 
 def prompt_for(req: Request):
@@ -79,18 +109,20 @@ def prompt_for(req: Request):
 def elastic_run(req: Request):
     # cold start: spin up a fresh engine + step loop (weights init = load
     # analogue); concurrent elastic requests then batch on it too
-    if not elastic_pool:
-        t = time.time()
-        eng = PagedInferenceEngine(
-            CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS,
-                                   max_slots=4, max_seq_len=MAXLEN, max_new_tokens=NEW,
-                                   chunk_tokens=CHUNK),
-            params=interactive.params,
-        )
-        elastic_pool.append(EngineLoop(eng).start())
-        print(f"  [elastic cold start: {time.time()-t:.1f}s]")
+    with elastic_lock:               # one cold start even under concurrency
+        if not elastic_pool:
+            t = time.time()
+            eng = PagedInferenceEngine(
+                CFG, PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS,
+                                       max_slots=4, max_seq_len=MAXLEN, max_new_tokens=NEW,
+                                       chunk_tokens=CHUNK),
+                params=interactive.params,
+            )
+            elastic_pool.append(EngineLoop(eng, name="elastic").start())
+            gauge.register_stats("elastic", elastic_pool[0].capacity_now)
+            print(f"  [elastic cold start: {time.time()-t:.1f}s]")
     loop = elastic_pool[0]
-    return loop.wait(loop.submit(prompt_for(req)), req.timeout_s).out
+    return loop.wait(loop.submit(prompt_for(req), trace=req.trace), req.timeout_s).out
 
 
 def loop_backend(tier, loop, capacity, queue_cap):
@@ -100,7 +132,7 @@ def loop_backend(tier, loop, capacity, queue_cap):
         capacity=capacity, queue_cap=queue_cap,
         capacity_fn=lambda: gauge.free("flask" if tier == Tier.FLASK else "docker"),
         stats_fn=lambda: gauge.stats("flask" if tier == Tier.FLASK else "docker"),
-        submit_fn=lambda req: loop.submit(prompt_for(req)),
+        submit_fn=lambda req: loop.submit(prompt_for(req), trace=req.trace),
         wait_fn=lambda sid, timeout: loop.wait(sid, timeout).out,
     )
 
@@ -113,9 +145,14 @@ router = StraightLineRouter(
     },
     policy=StraightLinePolicy(Thresholds(F=10, D=4096)),   # scaled-down thresholds
     window_s=10.0,
+    hedge_after_s=0.25,              # straggler mitigation: slow copies race a
+    tracer=tracer,                   # duplicate on the elastic tier
+    registry=registry,
 )
 
-router.start(8)                      # worker pools keep the decode batches fed
+# worker pools keep the decode batches fed; 16 serverless workers leave
+# headroom for hedge clones to race while their primaries still run
+router.start(16)
 rng = np.random.default_rng(0)
 N = 24
 # a burst: submit everything at once -> f_t crosses F -> elastic absorbs it
@@ -135,7 +172,54 @@ print("batch tier occupancy gauge:", gauge.occupancy("docker"),
       "prefill backlog:", gauge.prefill_backlog("docker"))
 for loop in [interactive_loop, batch_loop] + elastic_pool:
     loop.stop()
+sampler.stop()
 assert m.total == N and m.failure_rate == 0.0
+
+# --- observability outputs (the three artifacts this example certifies) ----
+
+# (a) lifecycle traces: every request settled exactly one trace; each shows
+# Algorithm 1's placement inputs; hedged requests race on parallel lanes
+traces = tracer.traces()
+assert len(traces) == N, (len(traces), N)
+for t in traces:
+    names = [s["name"] for s in t["spans"]]
+    assert "placement" in names, t["rid"]
+    placement = next(s for s in t["spans"] if s["name"] == "placement")
+    assert {"f_t", "flask_free", "docker_free", "tier"} <= set(placement["attrs"])
+hedged = [t for t in traces if any(e["name"] == "hedge_fired" for e in t["events"])]
+dual = [t for t in hedged
+        if sum(1 for s in t["spans"] if s["name"] == "execute") >= 2
+        and any(s["name"] == "queue_wait" for s in t["spans"])
+        and any(ts for ts in t["tokens"].values())]
+print(f"traces: {len(traces)} total, {len(hedged)} hedged, {len(dual)} dual-execution")
+assert hedged, "burst produced no hedged request"
+assert dual, "no hedged trace shows both racing executions"
+tracer.export_chrome(TRACE_OUT)
+with open(TRACE_OUT) as f:
+    chrome = json.load(f)                      # round-trips: Perfetto-loadable
+assert chrome["traceEvents"], "empty Chrome trace"
+print(f"wrote {TRACE_OUT} ({len(chrome['traceEvents'])} events)")
+
+# (b) Prometheus text: latency histograms from the engine loops + router
+prom = registry.prometheus_text()
+with open(METRICS_OUT, "w") as f:
+    f.write(prom)
+assert "ttft_seconds_bucket" in prom and "itl_seconds_bucket" in prom, prom[:400]
+assert "router_requests_total" in prom and "router_queue_wait_seconds_bucket" in prom
+print(f"wrote {METRICS_OUT} ({len(prom.splitlines())} lines)")
+
+# (c) MonitorSampler: a time series exists for every tier that served traffic
+live_tiers = {"elastic" if name == "SERVERLESS" else name.lower()
+              for name, n in by_tier.items() if n > 0}
+live_tiers |= {"flask", "docker"}            # stats probes registered up front
+assert live_tiers <= set(sampler.tiers()), (live_tiers, sampler.tiers())
+for tier in sorted(sampler.tiers()):
+    series = sampler.series(tier)
+    occ = [s["occupancy"] for s in series if s["occupancy"] is not None]
+    print(f"monitor[{tier}]: {len(series)} samples, peak occupancy "
+          f"{max(occ) if occ else 0.0:.2f}")
+
 print("OK — all requests served by real JAX paged engines through Algorithm 1,")
 print("     batched by shared step loops with chunked (budgeted) prefill,")
-print("     with S_F/S_D read live from page pools")
+print("     with S_F/S_D read live from page pools — and the whole run is")
+print("     observable: traces (Perfetto), Prometheus metrics, tier time series")

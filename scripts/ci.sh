@@ -34,3 +34,27 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/continuous_batchin
 # at identical greedy outputs on both engines — chunking cannot silently
 # regress to whole-prompt (head-of-line blocking) prefill.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/chunked_prefill.py --fast
+
+# Observability overhead gate: disabled tracing must be free (identical
+# outputs, ~0 throughput cost) and enabled tracing + MonitorSampler bounded —
+# instrumentation cannot silently become a tax on the serving hot path.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/observability_overhead.py --fast
+
+# End-to-end observability smoke: serve_hybrid self-asserts the three
+# artifacts (per-request lifecycle traces incl. dual-execution hedges,
+# Prometheus text with TTFT/ITL histograms, MonitorSampler per-tier time
+# series); re-validate the trace file parses as Chrome trace-event JSON.
+OBS_TMP=$(mktemp -d)
+TRACE_OUT="$OBS_TMP/trace.json" METRICS_OUT="$OBS_TMP/metrics.prom" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/serve_hybrid.py
+python - "$OBS_TMP" <<'PYEOF'
+import json, sys, os
+d = sys.argv[1]
+doc = json.load(open(os.path.join(d, "trace.json")))
+assert doc["traceEvents"], "empty Chrome trace"
+prom = open(os.path.join(d, "metrics.prom")).read()
+assert "ttft_seconds_bucket" in prom and "router_requests_total" in prom
+print(f"observability smoke: {len(doc['traceEvents'])} trace events, "
+      f"{len(prom.splitlines())} metric lines")
+PYEOF
+rm -rf "$OBS_TMP"

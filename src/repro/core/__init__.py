@@ -17,19 +17,34 @@ from repro.core.request import PlacementDecision, Request, Tier
 from repro.core.simulator import SimConfig, Simulation
 from repro.core.telemetry import (
     CapacityGauge,
+    Counter,
     FrequencyEstimator,
+    Gauge,
+    Histogram,
     Metrics,
+    MetricsRegistry,
+    MonitorSampler,
     batch_occupancy,
+    default_registry,
+    log_buckets,
+    prefill_backlog,
     queue_depth,
     warm_fraction,
 )
 from repro.core.tiers import TierConfig, TierSim
+from repro.core.tracing import NULL_TRACER, Trace, Tracer, trace_now
 
 __all__ = [
     "AdaptiveThresholds",
     "CapacityGauge",
+    "Counter",
     "FrequencyEstimator",
+    "Gauge",
+    "Histogram",
     "Metrics",
+    "MetricsRegistry",
+    "MonitorSampler",
+    "NULL_TRACER",
     "PlacementDecision",
     "RandomPolicy",
     "Request",
@@ -43,8 +58,14 @@ __all__ = [
     "Tier",
     "TierConfig",
     "TierSim",
+    "Trace",
+    "Tracer",
     "batch_occupancy",
+    "default_registry",
+    "log_buckets",
     "placing_batch_jax",
+    "prefill_backlog",
     "queue_depth",
+    "trace_now",
     "warm_fraction",
 ]

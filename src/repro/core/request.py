@@ -32,6 +32,10 @@ class Request:
     failed: bool = False
     fail_reason: str = ""
     hedged: bool = False
+    # lifecycle trace context (core/tracing.Trace), set by the router when a
+    # tracer is attached; a hedged copy (copy.copy) SHARES it — both racing
+    # executions record onto the same trace, on distinct lanes
+    trace: Optional[object] = field(default=None, repr=False, compare=False)
 
     @property
     def wait_s(self) -> float:

@@ -27,6 +27,25 @@ condition may be taken while holding nothing; the router registry lock
 (``_lock``) is innermost and never held across a backend run or an engine
 call.
 
+Trace context contract: with a ``tracer`` attached, ``submit`` begins a
+``core.tracing.Trace`` and carries it on ``req.trace`` for the request's
+whole lifetime. The router records the *placement* span with Algorithm 1's
+actual inputs (f_t, S_F/S_D free counts, the warm-up snapshot consumed,
+chosen tier + reason), an ``enqueued`` event per enqueue, a ``queue_wait``
+span and an ``execute`` span per execution copy, and events for deflection,
+retry-spill, hedging (``hedge_fired`` / ``hedge_discarded``) and failure.
+Each execution copy records on its own *lane* (tier name; ``*-hedge`` /
+``*-retry`` for duplicates) — a hedged request's racing copies therefore
+render as parallel tracks. Downstream components extend the SAME trace:
+``Backend.submit_fn`` should forward ``req.trace`` into
+``EngineLoop.submit(prompt, trace=...)`` so engine-side spans (chunked
+prefill, preemption, per-token decode) land in it. The trace is finished
+(moved into the tracer's ring) exactly once, when the rid settles. All of
+this is skipped at a single ``is None`` check per site when no tracer is
+attached. Router-side counters/histograms (requests, failures, hedges,
+queue-wait, response time) land in a ``telemetry.MetricsRegistry``
+(``default_registry()`` unless one is injected).
+
 Fault tolerance: per-request deadline, retry-once on a different tier on
 error, hedging for stragglers. Completed results are popped on retrieval
 and evicted past ``results_cap`` so a long-running router cannot grow its
@@ -43,7 +62,14 @@ from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.placing import StraightLinePolicy, place_compat, takes_warmup
 from repro.core.request import Request, Tier
-from repro.core.telemetry import FrequencyEstimator, Metrics, warm_fraction
+from repro.core.telemetry import (
+    FrequencyEstimator,
+    Metrics,
+    MetricsRegistry,
+    default_registry,
+    warm_fraction,
+)
+from repro.core.tracing import Tracer
 
 
 class RequestFailed(RuntimeError):
@@ -155,12 +181,16 @@ class StraightLineRouter:
         hedge_after_s: Optional[float] = None,
         retry_on_failure: bool = True,
         results_cap: int = 1024,
+        tracer: Optional[Tracer] = None,
+        registry: Optional[MetricsRegistry] = None,
     ):
         self.backends = backends
         self.policy = policy or StraightLinePolicy()
         self.freq = FrequencyEstimator(window_s=window_s)
         self.clock = clock
         self.metrics = Metrics()
+        self.tracer = tracer
+        self.registry = registry if registry is not None else default_registry()
         self.hedge_after_s = hedge_after_s
         self.retry_on_failure = retry_on_failure
         self.results_cap = results_cap
@@ -244,19 +274,43 @@ class StraightLineRouter:
     def submit(self, req: Request) -> Tier:
         now = self.clock()
         req.arrival_t = now
+        tr = (
+            self.tracer.begin(req.rid, t0=now, data_size=req.data_size, model=req.model)
+            if self.tracer is not None
+            else None
+        )
+        req.trace = tr
         with self._lock:
             self.freq.observe(now)
             f_t = self.freq.frequency(now)
+        # availability snapshots + the warm-up state actually consumed are
+        # Algorithm 1's inputs — captured into the placement span so a trace
+        # answers "why this tier"
+        flask_free, docker_free = self._free(Tier.FLASK), self._free(Tier.DOCKER)
+        warm_seen: Dict[str, object] = {}
+
+        def warm_fn():
+            w = self._warmup_snapshot()
+            warm_seen["w"] = w
+            return w
+
         d = place_compat(
-            self.policy,
-            req,
-            f_t,
-            self._free(Tier.FLASK),
-            self._free(Tier.DOCKER),
-            self._warmup_snapshot,
+            self.policy, req, f_t, flask_free, docker_free, warm_fn,
             self._policy_takes_warmup,
         )
         tier = d.tier
+        if tr is not None:
+            warm = warm_seen.get("w")
+            tr.add_span(
+                "placement", now, self.clock(),
+                f_t=f_t, flask_free=flask_free, docker_free=docker_free,
+                tier=tier.name, reason=d.reason,
+                warmth={
+                    t.name: (v["warmth"] if isinstance(v, dict) else v)
+                    for t, v in warm.items()
+                } if warm else None,
+            )
+        self.registry.counter("router_requests_total", {"tier": tier.name.lower()}).inc()
         # Registration happens after the fallible placement/probe calls (a
         # raising probe must not leak a forever-pending completion) but
         # before the enqueue, so a worker can never finish a request the
@@ -270,15 +324,41 @@ class StraightLineRouter:
         # rejected outright — a fast failure the client can retry, not an
         # unbounded queueing delay.
         req.tier = tier
-        if self.backends[tier].try_push(req):
+        if self._push_traced(self.backends[tier], req):
             return tier
         sls = self.backends.get(Tier.SERVERLESS)
         if tier != Tier.SERVERLESS and sls is not None:
             req.tier = Tier.SERVERLESS
-            if sls.try_push(req):
+            if tr is not None:
+                tr.event("deflected", t=self.clock(),
+                         from_tier=tier.name, to_tier=Tier.SERVERLESS.name)
+            self.registry.counter("router_deflections_total").inc()
+            if self._push_traced(sls, req):
                 return Tier.SERVERLESS
         self._fail(req, "queue-full")
         return req.tier
+
+    def _push_traced(self, b: Backend, req: Request) -> bool:
+        """try_push + the trace bookkeeping every enqueue path shares: stamp
+        the enqueue time (the queue_wait span's start) and record the
+        ``enqueued`` event on the copy's lane."""
+        t = self.clock()
+        req._enq_t = t
+        if not b.try_push(req):
+            return False
+        tr = req.trace
+        if tr is not None:
+            tr.event("enqueued", lane=self._lane(req), t=t, tier=b.tier.name)
+        return True
+
+    @staticmethod
+    def _lane(req: Request) -> str:
+        """Trace lane for one execution copy: its tier, suffixed for
+        hedge/retry duplicates (set where the duplicate is created)."""
+        lane = getattr(req, "_lane_tag", None)
+        if lane is not None:
+            return lane
+        return req.tier.name.lower() if req.tier is not None else "router"
 
     # -- completion registry (exactly-once) -----------------------------------
     def _completion_for(self, req: Request) -> _Completion:
@@ -312,8 +392,29 @@ class StraightLineRouter:
             self._done_order.append(req.rid)
             self._evict_locked()
         self.metrics.record(req)
+        self._record_outcome(req, failure)
         c.event.set()
         return True
+
+    def _record_outcome(self, req: Request, failure: Optional[str]) -> None:
+        """Final per-rid observability: outcome counters, the response-time
+        histogram, and the trace hand-off into the tracer ring (exactly
+        once — losing hedge copies never reach here)."""
+        tier = req.tier.name.lower() if req.tier is not None else "none"
+        if failure is None:
+            self.registry.counter("router_completions_total", {"tier": tier}).inc()
+            if req.response_s is not None:
+                self.registry.histogram("router_response_seconds", {"tier": tier}).observe(
+                    req.response_s
+                )
+        else:
+            self.registry.counter("router_failures_total", {"reason": failure}).inc()
+        if req.trace is not None and self.tracer is not None:
+            self.tracer.finish(
+                req.trace, tier=req.tier.name if req.tier is not None else None,
+                failed=failure is not None, fail_reason=failure or "",
+                response_s=req.response_s, hedged=req.hedged,
+            )
 
     def _evict_locked(self) -> None:
         """Bound results + completion-registry growth (caller holds _lock).
@@ -340,6 +441,8 @@ class StraightLineRouter:
         req.failed = True
         req.fail_reason = reason
         req.finish_t = self.clock()
+        if req.trace is not None:
+            req.trace.event("failed", lane=self._lane(req), t=req.finish_t, reason=reason)
         self._settle(self._completion_for(req), req, None, reason)
 
     def result(self, rid: int, timeout: Optional[float] = None) -> object:
@@ -379,12 +482,18 @@ class StraightLineRouter:
         if b is None:
             return False
         prev_tier = req.tier
+        prev_lane = getattr(req, "_lane_tag", None)
         req.hedged = True
         req.tier = Tier.SERVERLESS     # metrics must attribute the execution here
-        if b.try_push(req):
+        req._lane_tag = "serverless-retry"
+        if self._push_traced(b, req):
+            if req.trace is not None:
+                req.trace.event("retry_spill", t=self.clock(), from_tier=prev_tier.name)
+            self.registry.counter("router_retry_spills_total").inc()
             return True
         req.hedged = False             # spill refused: keep the request retryable
         req.tier = prev_tier
+        req._lane_tag = prev_lane
         return False
 
     def _execute(self, b: Backend, req: Request) -> None:
@@ -399,11 +508,21 @@ class StraightLineRouter:
         worker owns one copy of the request until it reaches a terminal
         state."""
         c = self._completion_for(req)
+        tr = req.trace
+        lane = self._lane(req)
         if c.done:
             with self._lock:
                 c.live -= 1            # hedge race already won — discard copy
+            if tr is not None:
+                tr.event("hedge_discarded", lane=lane, t=self.clock())
             return
         now = self.clock()
+        enq_t = getattr(req, "_enq_t", req.arrival_t)
+        if tr is not None:
+            tr.add_span("queue_wait", enq_t, now, lane=lane, tier=b.tier.name)
+        self.registry.histogram(
+            "router_queue_wait_seconds", {"tier": b.tier.name.lower()}
+        ).observe(max(0.0, now - enq_t))
         if now - req.arrival_t > req.timeout_s:
             self._fail(req, "timeout-in-queue")
             return
@@ -419,9 +538,15 @@ class StraightLineRouter:
             # the engine loop outlived the request's deadline: the deadline
             # verdict is final — retrying elsewhere cannot beat a clock that
             # already ran out
+            if tr is not None:
+                tr.add_span("execute", now, self.clock(), lane=lane,
+                            tier=b.tier.name, outcome="timeout")
             self._fail(req, "timeout")
             return
         except Exception as e:  # tier failure
+            if tr is not None:
+                tr.add_span("execute", now, self.clock(), lane=lane,
+                            tier=b.tier.name, outcome=f"error:{type(e).__name__}")
             retryable = (
                 self.retry_on_failure and not req.hedged and req.tier != Tier.SERVERLESS
             )
@@ -429,6 +554,9 @@ class StraightLineRouter:
                 self._fail(req, f"error:{type(e).__name__}")
             return
         req.finish_t = self.clock()
+        if tr is not None:
+            tr.add_span("execute", now, req.finish_t, lane=lane,
+                        tier=b.tier.name, outcome="ok")
         if req.finish_t - req.arrival_t > req.timeout_s:
             self._fail(req, "timeout")
         else:
@@ -464,10 +592,14 @@ class StraightLineRouter:
                 return
             req.hedged = True          # never hedge the same request twice
             c.live += 1
-        clone = copy.copy(req)
+        if req.trace is not None:
+            req.trace.event("hedge_fired", t=self.clock(), original_tier=req.tier.name)
+        self.registry.counter("router_hedges_total").inc()
+        clone = copy.copy(req)         # shares req.trace: both copies record
         clone.hedged = True
         clone.tier = Tier.SERVERLESS
-        if not b.try_push(clone):
+        clone._lane_tag = "serverless-hedge"
+        if not self._push_traced(b, clone):
             # hedge target saturated — no duplicate. req.hedged stays True:
             # a request gets one hedge opportunity, not a retry loop that
             # hammers a saturated elastic tier every monitor tick.
@@ -479,6 +611,7 @@ class StraightLineRouter:
                 # was absorbed against this never-enqueued duplicate — its
                 # failure is the rid's outcome, settled here exactly once
                 self.metrics.record(orphan)
+                self._record_outcome(orphan, c.failure)
                 c.event.set()
 
     def _adopt_pending_locked(self, c: _Completion) -> Optional[Request]:

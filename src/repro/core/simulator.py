@@ -22,6 +22,7 @@ from repro.core.placing import StraightLinePolicy, place_compat, takes_warmup
 from repro.core.request import Request, Tier
 from repro.core.telemetry import FrequencyEstimator, Metrics
 from repro.core.tiers import TierSim
+from repro.core.tracing import Tracer
 
 
 @dataclass
@@ -33,12 +34,17 @@ class SimConfig:
 
 
 class Simulation:
-    def __init__(self, policy, tiers: Dict[Tier, TierSim], cfg: SimConfig = SimConfig()):
+    def __init__(self, policy, tiers: Dict[Tier, TierSim], cfg: SimConfig = SimConfig(),
+                 tracer: Optional[Tracer] = None):
         self.policy = policy
         self.tiers = tiers
         self.cfg = cfg
         self.freq = FrequencyEstimator(window_s=cfg.window_s)
         self.metrics = Metrics()
+        # optional lifecycle tracing; trace timestamps here are SIM time
+        # (seconds on the event-queue clock), never wall time — a trace is
+        # internally consistent, do not mix the two bases in one tracer
+        self.tracer = tracer
         self._events: List = []
         self._seq = itertools.count()
         self._done: Dict[int, bool] = {}
@@ -61,6 +67,9 @@ class Simulation:
     def _start_service(self, req: Request, tier: TierSim, now: float) -> None:
         svc = tier.service_time(req, now)
         req.start_t = now
+        if req.trace is not None:
+            req.trace.add_span("service", now, now + svc,
+                               lane=tier.cfg.tier.name.lower(), service_s=svc)
         if tier.cfg.tier == Tier.SERVERLESS:
             tier.inflight += 1
             tier.warm_instances.append(now + svc)
@@ -80,6 +89,9 @@ class Simulation:
             self._start_service(req, tier, now)
         elif len(tier.queue) < tier.cfg.queue_cap:
             tier.queue.append(req)
+            if req.trace is not None:
+                req.trace.event("enqueued", lane=tier_id.name.lower(), t=now,
+                                depth=len(tier.queue))
         else:
             self._fail(req, now, "queue-overflow")
 
@@ -88,6 +100,8 @@ class Simulation:
             return
         if self.cfg.retry_failed_on_elastic and not req.hedged and req.tier != Tier.SERVERLESS:
             req.hedged = True
+            if req.trace is not None:
+                req.trace.event("retry_spill", t=now, reason=reason)
             self._submit(req, Tier.SERVERLESS, now)
             return
         self._done[req.rid] = True
@@ -95,6 +109,9 @@ class Simulation:
         req.fail_reason = reason
         req.finish_t = now
         self.metrics.record(req)
+        if req.trace is not None:
+            req.trace.event("failed", t=now, reason=reason)
+            self._finish_trace(req)
 
     def _finish(self, req: Request, tier: TierSim, now: float) -> None:
         if tier.cfg.tier == Tier.SERVERLESS:
@@ -116,6 +133,16 @@ class Simulation:
         req.finish_t = now
         tier.served += 1
         self.metrics.record(req)
+        self._finish_trace(req)
+
+    def _finish_trace(self, req: Request) -> None:
+        if self.tracer is not None and req.trace is not None:
+            self.tracer.finish(
+                req.trace,
+                tier=req.tier.name if req.tier is not None else None,
+                failed=req.failed, fail_reason=req.fail_reason,
+                response_s=req.response_s, hedged=req.hedged,
+            )
 
     # -- main loop ------------------------------------------------------------
     def run(self, requests: List[Request]) -> Metrics:
@@ -129,15 +156,26 @@ class Simulation:
                 self.freq.observe(now)
                 f_t = self.freq.frequency(now)
                 self._f_t = f_t
+                flask_free = self.tiers[Tier.FLASK].free_slots()
+                docker_free = self.tiers[Tier.DOCKER].free_slots()
                 d = place_compat(
                     self.policy,
                     req,
                     f_t,
-                    self.tiers[Tier.FLASK].free_slots(),
-                    self.tiers[Tier.DOCKER].free_slots(),
+                    flask_free,
+                    docker_free,
                     self._warmup,
                     self._takes_warmup,
                 )
+                if self.tracer is not None:
+                    req.trace = self.tracer.begin(
+                        req.rid, t0=now, data_size=req.data_size, model=req.model
+                    )
+                    if req.trace is not None:
+                        req.trace.add_span(
+                            "placement", now, now, f_t=f_t, flask_free=flask_free,
+                            docker_free=docker_free, tier=d.tier.name, reason=d.reason,
+                        )
                 self._submit(req, d.tier, now)
                 if self.cfg.hedge_after_s is not None and d.tier != Tier.SERVERLESS:
                     self._push(now + self.cfg.hedge_after_s, "hedge", req)
@@ -152,6 +190,8 @@ class Simulation:
                 if not self._done.get(req.rid) and req.start_t is None:
                     # still queued somewhere: fire a copy at the elastic tier
                     req.hedged = True
+                    if req.trace is not None:
+                        req.trace.event("hedge_fired", t=now)
                     self._submit(req, Tier.SERVERLESS, now)
         return self.metrics
 

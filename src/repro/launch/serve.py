@@ -22,6 +22,16 @@ compile — and, because the placer reads warm-up state (compile_events /
 total_buckets, weighted by the measured compile-cost EMA) through each
 backend's ``stats_fn``, a prewarmed tier attracts traffic while a cold one
 is still compiling.
+
+Observability: ``--trace-out trace.json`` records every request's lifecycle
+(placement inputs, queue wait, execution, hedges, per-token decode stamps)
+and writes Chrome trace-event JSON — load it in Perfetto / chrome://tracing;
+one process per request, one thread per lane. ``--metrics-interval S``
+starts a ``MonitorSampler`` sweeping every tier's ``capacity_now`` probe
+into per-tier time series at that period; ``--metrics-out metrics.prom``
+dumps the process metrics registry (request counters, queue-wait / TTFT /
+inter-token histograms, sampled tier gauges) in Prometheus text format at
+exit. All of it is off (and costs nothing) unless the flags are given.
 """
 from __future__ import annotations
 
@@ -52,12 +62,29 @@ def main() -> None:
                          "when capacity binds — use 0 for exact parity there)")
     ap.add_argument("--step-budget", type=int, default=0,
                     help="per-step prefill+decode token budget (0 = auto)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request Chrome trace-event JSON here "
+                         "(Perfetto-loadable); omit to disable tracing")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="MonitorSampler period in seconds (0 = off): sweeps "
+                         "every tier's capacity_now probe into time series")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry as Prometheus text here")
     args = ap.parse_args()
 
     import numpy as np
 
     from repro.configs.registry import get_config
-    from repro.core import Request, StraightLinePolicy, Thresholds, Tier
+    from repro.core import (
+        CapacityGauge,
+        MonitorSampler,
+        Request,
+        StraightLinePolicy,
+        Thresholds,
+        Tier,
+        Tracer,
+        default_registry,
+    )
     from repro.core.router import Backend, StraightLineRouter
     from repro.models.quant import quantize_params
     from repro.serving.engine import EngineConfig, InferenceEngine
@@ -93,6 +120,14 @@ def main() -> None:
             )
         print(f"  prewarm took {time.time()-t:.1f}s")
 
+    tracer = Tracer() if args.trace_out else None
+    gauge = CapacityGauge()
+    sampler = None
+    if args.metrics_interval > 0:
+        sampler = MonitorSampler(
+            gauge, interval_s=args.metrics_interval, registry=default_registry()
+        )
+
     elastic: list = []
     elastic_lock = threading.Lock()
 
@@ -109,12 +144,18 @@ def main() -> None:
             if not elastic:
                 t = time.time()
                 eng = InferenceEngine(cfg, ecfg(2), params=params)
-                elastic.append(eng if args.serialized else EngineLoop(eng).start())
+                elastic.append(
+                    eng if args.serialized else EngineLoop(eng, name="elastic").start()
+                )
+                gauge.register_stats(
+                    "elastic",
+                    eng.capacity_now if args.serialized else elastic[0].capacity_now,
+                )
                 print(f"  [elastic cold start {time.time()-t:.1f}s]")
         if args.serialized:
             return run_on(elastic[0])(req)
         loop = elastic[0]
-        return loop.wait(loop.submit(prompt_for(req)), req.timeout_s).out
+        return loop.wait(loop.submit(prompt_for(req), trace=req.trace), req.timeout_s).out
 
     loops: list = []
 
@@ -123,15 +164,18 @@ def main() -> None:
         shared step loop and block on futures (capacity = max_slots so the
         pool keeps the decode batch fed); --serialized keeps the
         lock-holding generate path."""
+        name = tier.name.lower()
         if args.serialized:
+            gauge.register_stats(name, engine.capacity_now)
             return Backend(tier, run_on(engine), capacity=capacity, queue_cap=queue_cap,
                            stats_fn=engine.capacity_now)
-        loop = EngineLoop(engine).start()
+        loop = EngineLoop(engine, name=name).start()
         loops.append(loop)
+        gauge.register_stats(name, loop.capacity_now)
         return Backend(
             tier, run_on(engine), capacity=capacity, queue_cap=queue_cap,
             stats_fn=loop.capacity_now,
-            submit_fn=lambda req: loop.submit(prompt_for(req)),
+            submit_fn=lambda req: loop.submit(prompt_for(req), trace=req.trace),
             wait_fn=lambda sid, timeout: loop.wait(sid, timeout).out,
         )
 
@@ -144,7 +188,10 @@ def main() -> None:
         policy=StraightLinePolicy(Thresholds(F=args.F, D=args.D)),
         window_s=10.0,
         hedge_after_s=args.hedge_after,
+        tracer=tracer,
     )
+    if sampler is not None:
+        sampler.start()
     if args.workers > 0:
         router.start(args.workers)
     rng = np.random.default_rng(0)
@@ -158,6 +205,18 @@ def main() -> None:
         router.stop()
     for lp in loops + [e for e in elastic if isinstance(e, EngineLoop)]:
         lp.stop()
+    if sampler is not None:
+        sampler.stop()
+        covered = {t: len(sampler.series(t)) for t in sampler.tiers()}
+        print(f"monitor: {sampler.samples_taken} samples across tiers {covered}")
+    if tracer is not None:
+        tracer.export_chrome(args.trace_out)
+        print(f"wrote {len(tracer)} traces to {args.trace_out} "
+              f"(open in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(default_registry().prometheus_text())
+        print(f"wrote metrics registry to {args.metrics_out}")
     m = router.metrics
     by_tier = {t.name: sum(1 for r in m.completed if r.tier == t) for t in Tier}
     mode = f"{args.workers} workers/tier" if args.workers > 0 else "serial poll loop"

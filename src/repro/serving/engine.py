@@ -134,10 +134,25 @@ class Sequence:
     out: List[int] = field(default_factory=list)
     done: bool = False
     preemptions: int = 0
+    # observability: submit timestamp + one monotonic stamp per emitted
+    # token (TTFT = token_times[0] - submit_t; inter-token gaps = diffs).
+    # Always recorded — one float append per token, noise next to a device
+    # step — so latency histograms exist even without a tracer attached.
+    submit_t: float = 0.0
+    token_times: List[float] = field(default_factory=list)
+    # lifecycle trace context (core/tracing.Trace) carried from the router
+    # through EngineLoop.submit; None = untraced (zero-cost path)
+    trace: Optional[object] = field(default=None, repr=False, compare=False)
 
     def context_tokens(self) -> List[int]:
         """Tokens that must be in cache to resume decoding (recompute)."""
         return list(self.prompt) + list(self.out)
+
+    @property
+    def lane(self) -> str:
+        """Trace lane for this sequence's engine-side spans (a hedged
+        request's two sids give two parallel lanes in one trace)."""
+        return f"engine-sid{self.sid}"
 
 
 class _EngineBase:
@@ -157,11 +172,14 @@ class _EngineBase:
     def free_slots(self) -> int:
         return sum(1 for s in self.slot_seq if s is None)
 
-    def submit(self, prompt: List[int]) -> int:
+    def submit(self, prompt: List[int], trace=None) -> int:
         with self.lock:
-            seq = Sequence(self._sid, list(prompt))
+            seq = Sequence(self._sid, list(prompt), submit_t=time.monotonic(), trace=trace)
             self._sid += 1
             self.waiting.append(seq)
+            if trace is not None:
+                trace.event("engine_submit", lane=seq.lane, t=seq.submit_t,
+                            sid=seq.sid, prompt_tokens=len(prompt))
             return seq.sid
 
     # -- bucketed prefill shapes ---------------------------------------------
@@ -279,6 +297,11 @@ class _EngineBase:
         self._chunk_carry[slot] = self.model.init_chunk_state()
         self._stamp[slot] = self._stamp_next
         self._stamp_next += 1
+        if seq.trace is not None:
+            seq.trace.event(
+                "admitted", lane=seq.lane, slot=slot, chunked=True,
+                ctx_tokens=len(self._chunk_ctx[slot]), resume=seq.preemptions,
+            )
 
     def _prefilling_slots(self) -> List[int]:
         """PREFILLING slots in admission order (FIFO chunk service)."""
@@ -322,11 +345,16 @@ class _EngineBase:
         pos = int(self._chunk_pos[slot])
         piece = ctx[pos : pos + self._chunk_tokens]
         toks, n, _, fresh = self._pad_context(piece, cap=self._chunk_tokens)
+        tr = seq.trace
+        tr0 = time.monotonic() if tr is not None else 0.0
         t0 = time.perf_counter()
         nxt = self._run_chunk_device(slot, toks, pos, n)
         if fresh:
             jax.block_until_ready(nxt)
             self._note_compile(time.perf_counter() - t0)
+        if tr is not None:
+            tr.add_span("prefill_chunk", tr0, time.monotonic(), lane=seq.lane,
+                        offset=pos, tokens=n, fresh_compile=fresh)
         new_pos = pos + n
         self._chunk_pos[slot] = new_pos
         self.slot_len[slot] = new_pos
@@ -337,6 +365,7 @@ class _EngineBase:
         tok = int(nxt)
         self._last[slot] = tok
         seq.out.append(tok)
+        seq.token_times.append(time.monotonic())  # the prefill-emitted token
         if self._stop_hit(seq, tok, int(self.slot_len[slot])):
             # the prefill-emitted token can already cross a stop condition
             seq.done = True
@@ -579,6 +608,8 @@ class InferenceEngine(_EngineBase):
                 break                        # over budget: stays queued
             seq = self.waiting.popleft()
             toks, n, _, fresh = self._pad_context(seq.prompt)
+            tr = seq.trace
+            tr0 = time.monotonic() if tr is not None else 0.0
             t0 = time.perf_counter()
             nxt, self.cache = self._prefill(
                 self.params, self.cache, jnp.asarray(toks), jnp.asarray(i), jnp.asarray(n)
@@ -586,12 +617,16 @@ class InferenceEngine(_EngineBase):
             if fresh:
                 jax.block_until_ready(nxt)
                 self._note_compile(time.perf_counter() - t0)
+            if tr is not None:
+                tr.add_span("prefill", tr0, time.monotonic(), lane=seq.lane,
+                            slot=i, tokens=n, fresh_compile=fresh)
             spent += Lp
             admitted = True
             self.slot_seq[i] = seq
             self.slot_len[i] = n
             self._last[i] = int(nxt)
             seq.out.append(int(nxt))
+            seq.token_times.append(time.monotonic())
             if self._stop_hit(seq, int(nxt), int(self.slot_len[i])):
                 # the prefill-emitted token can already cross a stop
                 # condition (max_new_tokens=1, or greedy EOS on prompt)
@@ -627,11 +662,13 @@ class InferenceEngine(_EngineBase):
                     self.params, self.cache, jnp.asarray(self._last), lens
                 )
                 nxt = np.asarray(nxt)
+                tok_t = time.monotonic()      # one stamp per batched decode step
                 for i in active:
                     seq = self.slot_seq[i]
                     self.slot_len[i] += 1
                     self._last[i] = nxt[i]
                     seq.out.append(int(nxt[i]))
+                    seq.token_times.append(tok_t)
                     if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
                         seq.done = True
                         finished.append(seq)
@@ -856,12 +893,12 @@ class PagedInferenceEngine(_EngineBase):
             jnp.asarray(1),
         )
 
-    def submit(self, prompt: List[int]) -> int:
+    def submit(self, prompt: List[int], trace=None) -> int:
         if len(prompt) + self.pcfg.max_new_tokens > self.pcfg.max_seq_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens exceeds max_seq_len={self.pcfg.max_seq_len}"
             )
-        return super().submit(prompt)
+        return super().submit(prompt, trace=trace)
 
     def _free_slot(self) -> Optional[int]:
         for i in range(self.pcfg.max_slots):
@@ -878,6 +915,8 @@ class PagedInferenceEngine(_EngineBase):
         self.tables[slot] = table
         self.block_tab[slot, :] = table.row(self.pcfg.table_width)
         toks, n, _, fresh = self._pad_context(ctx_toks)
+        tr = seq.trace
+        tr0 = time.monotonic() if tr is not None else 0.0
         t0 = time.perf_counter()
         nxt, self.cache = self._prefill(
             self.params,
@@ -890,6 +929,10 @@ class PagedInferenceEngine(_EngineBase):
         if fresh:
             jax.block_until_ready(nxt)
             self._note_compile(time.perf_counter() - t0)
+        if tr is not None:
+            tr.add_span("prefill", tr0, time.monotonic(), lane=seq.lane,
+                        slot=slot, tokens=n, fresh_compile=fresh,
+                        resume=seq.preemptions)
         self.slot_seq[slot] = seq
         self.slot_len[slot] = n
         self._last[slot] = int(nxt)
@@ -946,6 +989,7 @@ class PagedInferenceEngine(_EngineBase):
             spent += Lp
             admitted = True
             seq.out.append(nxt)
+            seq.token_times.append(time.monotonic())
             if self._stop_hit(seq, nxt, int(self.slot_len[slot])):
                 # the (re-)prefill-emitted token can already cross a stop
                 # condition: a resumed sequence near max_new_tokens, or a
@@ -962,6 +1006,9 @@ class PagedInferenceEngine(_EngineBase):
         seq = self.slot_seq[victim]
         seq.preemptions += 1
         self.preemptions += 1
+        if seq.trace is not None:
+            seq.trace.event("preempted", lane=seq.lane, slot=victim,
+                            n_out=len(seq.out), preemptions=seq.preemptions)
         self.waiting.appendleft(seq)
         self._release(victim)
         active.remove(victim)
@@ -1027,12 +1074,14 @@ class PagedInferenceEngine(_EngineBase):
                     jnp.asarray(self.block_tab),
                 )
                 nxt = np.asarray(nxt)
+                tok_t = time.monotonic()      # one stamp per batched decode step
                 for i in active:
                     seq = self.slot_seq[i]
                     self.slot_len[i] += 1
                     self.tables[i].num_tokens = int(self.slot_len[i])
                     self._last[i] = nxt[i]
                     seq.out.append(int(nxt[i]))
+                    seq.token_times.append(tok_t)
                     if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
                         seq.done = True
                         finished.append(seq)
@@ -1060,7 +1109,8 @@ class PagedInferenceEngine(_EngineBase):
             except OutOfPages:
                 return None
             seq = self.slot_seq[src]
-            clone = Sequence(self._sid, list(seq.prompt), out=list(seq.out))
+            clone = Sequence(self._sid, list(seq.prompt), out=list(seq.out),
+                             submit_t=time.monotonic(), trace=seq.trace)
             self._sid += 1
             n_full = new_table.num_tokens // self.pcfg.page_size
             src_part = self.tables[src].pages[n_full:]

@@ -29,6 +29,18 @@ and subsequent submits raise. ``stop()`` joins the thread and unblocks
 pending waiters with a "loop stopped" error; sequences already inside the
 engine stay there (matching the router's stop() contract of leaving queued
 work queued).
+
+Trace context contract: ``submit(prompt, trace=...)`` forwards a
+``core.tracing.Trace`` into the engine (carried on the ``Sequence``), so
+engine-side spans — chunked-prefill chunks, preemption/resume, per-token
+decode instants — land in the request's router-begun trace on a per-sid
+lane (``engine-sid<N>``; a hedged request's two sids give two lanes). At
+resolve time the loop copies the sequence's per-token timestamps into the
+trace and derives TTFT / inter-token-latency observations into the
+``ttft_seconds`` / ``itl_seconds`` histograms of its metrics registry
+(``telemetry.default_registry()`` unless injected), labeled with the
+loop's ``name``. All tracing work is guarded on ``trace is not None`` —
+untraced submits pay one branch.
 """
 from __future__ import annotations
 
@@ -36,6 +48,8 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from repro.core.telemetry import MetricsRegistry, default_registry
+from repro.core.tracing import Trace, trace_now
 from repro.serving.engine import Sequence
 
 
@@ -62,9 +76,17 @@ class EngineLoop:
     ``_unclaimed`` and claimed at registration — no completion is lost.
     """
 
-    def __init__(self, engine, idle_wait_s: float = 0.02):
+    def __init__(
+        self,
+        engine,
+        idle_wait_s: float = 0.02,
+        name: str = "engine",
+        registry: Optional[MetricsRegistry] = None,
+    ):
         self.engine = engine
         self.idle_wait_s = idle_wait_s
+        self.name = name
+        self.registry = registry if registry is not None else default_registry()
         self._lock = threading.Lock()
         self._futures: Dict[int, _SeqFuture] = {}
         self._unclaimed: Dict[int, Sequence] = {}
@@ -107,12 +129,14 @@ class EngineLoop:
         self.stop()
 
     # -- submission / completion ----------------------------------------------
-    def submit(self, prompt: List[int]) -> int:
+    def submit(self, prompt: List[int], trace: Optional[Trace] = None) -> int:
         """Enqueue a prompt for continuous batching; returns its sid. The
-        engine admits it at the next step with free capacity."""
+        engine admits it at the next step with free capacity. ``trace``
+        rides the Sequence so engine-side spans land in the request's
+        lifecycle trace."""
         if self._error is not None:
             raise RuntimeError(f"engine loop failed: {self._error!r}") from self._error
-        sid = self.engine.submit(prompt)
+        sid = self.engine.submit(prompt, trace=trace)
         with self._lock:
             fut = _SeqFuture()
             seq = self._unclaimed.pop(sid, None)
@@ -200,6 +224,7 @@ class EngineLoop:
         sequences finished this step."""
         finished = self.engine.step()
         self.steps += 1
+        self.registry.counter("engine_loop_steps_total", {"engine": self.name}).inc()
         if finished:
             self._resolve(finished)
         return finished
@@ -226,6 +251,8 @@ class EngineLoop:
                 return
 
     def _resolve(self, seqs: List[Sequence]) -> None:
+        for seq in seqs:
+            self._observe_finished(seq)
         with self._lock:
             for seq in seqs:
                 if seq.sid in self._abandoned:     # waiter timed out and left
@@ -237,6 +264,29 @@ class EngineLoop:
                 else:
                     fut.seq = seq
                     fut.event.set()
+
+    def _observe_finished(self, seq: Sequence) -> None:
+        """Per-sequence terminal observability: TTFT / inter-token-latency
+        histogram observations from the engine-stamped token times, token
+        throughput counters, and the trace hand-off (per-token instants onto
+        the sequence's engine lane)."""
+        labels = {"engine": self.name}
+        times = seq.token_times
+        if times:
+            self.registry.histogram("ttft_seconds", labels).observe(
+                max(0.0, times[0] - seq.submit_t)
+            )
+            itl = self.registry.histogram("itl_seconds", labels)
+            for a, b in zip(times, times[1:]):
+                itl.observe(max(0.0, b - a))
+        self.registry.counter("engine_tokens_total", labels).inc(len(seq.out))
+        if seq.trace is not None:
+            lane = f"engine-sid{seq.sid}"
+            seq.trace.add_tokens(lane, times)
+            seq.trace.event(
+                "resolved", lane=lane, t=trace_now(), sid=seq.sid,
+                n_out=len(seq.out), preemptions=seq.preemptions, engine=self.name,
+            )
 
     def _fail_pending(self, err: BaseException) -> None:
         with self._lock:
