@@ -35,6 +35,13 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/continuous_batchin
 # regress to whole-prompt (head-of-line blocking) prefill.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/chunked_prefill.py --fast
 
+# Prefix-cache smoke: asserts a multi-turn chat conversation's median TTFT
+# improves >= 3x with the radix-tree prefix cache on (byte-identical greedy
+# outputs vs cold prefill) while cache-on throughput on unique prompts — the
+# no-hit worst case — stays within 5% of cache-off, so the cache can neither
+# silently regress to full prefill nor tax workloads that never hit it.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/prefix_cache.py --fast
+
 # Observability overhead gate: disabled tracing must be free (identical
 # outputs, ~0 throughput cost) and enabled tracing + MonitorSampler bounded —
 # instrumentation cannot silently become a tax on the serving hot path.

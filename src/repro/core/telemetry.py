@@ -91,6 +91,38 @@ def warm_fraction(stats: Optional[dict]) -> Optional[float]:
     return min(1.0, max(0.0, stats.get("compile_events", 0) / total))
 
 
+def cached_pages(stats: Optional[dict]) -> Optional[int]:
+    """Pages held warm by the engine's cross-request prefix cache from a
+    ``capacity_now()``-style snapshot, or None when the snapshot is missing
+    or the engine runs without a prefix cache (the key is then absent)."""
+    if not stats:
+        return None
+    c = stats.get("cached_pages")
+    return None if c is None else int(c)
+
+
+def prefix_hit_rate(stats: Optional[dict]) -> Optional[float]:
+    """Fraction of admissions whose prompt matched >= 1 cached page, from a
+    ``capacity_now()``-style snapshot; None when no prefix cache exports."""
+    if not stats:
+        return None
+    r = stats.get("prefix_hit_rate")
+    return None if r is None else min(1.0, max(0.0, float(r)))
+
+
+def reclaimable_pages(stats: Optional[dict]) -> Optional[int]:
+    """The placer's free-ish page view: truly free pages plus evictable
+    (unpinned) prefix-cache pages, which the engine reclaims before ever
+    preempting a live sequence. Falls back to plain ``free_pages`` when the
+    engine has no prefix cache; None when the snapshot exports neither."""
+    if not stats:
+        return None
+    free = stats.get("free_pages")
+    if free is None:
+        return None
+    return int(free) + int(stats.get("evictable_pages") or 0)
+
+
 class FrequencyEstimator:
     """Thread-safe f_t estimator: ``observe``/``frequency`` may be called
     from any thread (the concurrent router's workers observe while the
@@ -190,6 +222,19 @@ class CapacityGauge:
         """Unabsorbed prompt tokens behind ``name``'s chunked prefill, or
         None when the stats probe does not export a backlog."""
         return prefill_backlog(self.stats(name))
+
+    def cached_pages(self, name: str) -> Optional[int]:
+        """Prefix-cache pages held warm by ``name``, or None (no cache)."""
+        return cached_pages(self.stats(name))
+
+    def prefix_hit_rate(self, name: str) -> Optional[float]:
+        """Prefix-cache hit rate for ``name``, or None (no cache)."""
+        return prefix_hit_rate(self.stats(name))
+
+    def reclaimable_pages(self, name: str) -> Optional[int]:
+        """Free + evictable-cache pages for ``name`` — the capacity view
+        that counts cold prefix-cache leaves as reclaimable."""
+        return reclaimable_pages(self.stats(name))
 
     def snapshot(self) -> Dict[str, int]:
         return {name: max(0, int(p())) for name, p in self._probes.items()}
@@ -496,7 +541,8 @@ class MonitorSampler:
     Every ``interval_s`` it snapshots each registered rich probe
     (``capacity_now``-style dicts) into a bounded per-tier ring buffer of
     ``{"t", "occupancy", "free_pages", "free_slots", "queue_depth",
-    "prefill_backlog", "warmth"}`` samples — the time series ROADMAP item
+    "prefill_backlog", "warmth", "cached_pages", "prefix_hit_rate"}``
+    samples — the time series ROADMAP item
     5's short-horizon forecaster consumes. ``window(tier, last_s)`` returns
     the recent slice; reads and the sampling thread share a lock, so
     windows are consistent under concurrent sampling. When a registry is
@@ -577,6 +623,8 @@ class MonitorSampler:
                 "queue_depth": queue_depth(stats),
                 "prefill_backlog": prefill_backlog(stats),
                 "warmth": warm_fraction(stats),
+                "cached_pages": cached_pages(stats),
+                "prefix_hit_rate": prefix_hit_rate(stats),
             }
             with self._lock:
                 ring = self._series.get(tier)
@@ -588,7 +636,8 @@ class MonitorSampler:
             if self.registry is not None:
                 labels = {"tier": tier}
                 for key in ("occupancy", "queue_depth", "prefill_backlog", "warmth",
-                            "free_pages", "free_slots"):
+                            "free_pages", "free_slots", "cached_pages",
+                            "prefix_hit_rate"):
                     v = sample[key]
                     if v is not None:
                         self.registry.gauge(f"tier_{key}", labels).set(float(v))

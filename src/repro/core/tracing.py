@@ -8,8 +8,12 @@ answers *why one request was slow*. Each submitted request carries a
 execution (including hedge races — the duplicate copy shares the original's
 trace and records on its own *lane*), the ``EngineLoop`` admit→resolve
 cycle, and the engines' chunked-prefill / preemption / per-token decode
-machinery. The result is a bounded ring of finished traces exportable two
-ways:
+machinery. Prefix-cache engines add instants on the sequence's engine lane:
+``prefix_hit`` / ``prefix_miss`` at admission (with ``matched_tokens``, so
+a Perfetto view shows exactly how much prefill was skipped) and
+``prefix_evict`` when cold cached leaves are reclaimed to cover an
+allocation (with ``freed_pages``). The result is a bounded ring of finished
+traces exportable two ways:
 
 * ``Tracer.traces()`` — structured dicts (the test/forecaster surface);
 * ``Tracer.chrome_trace()`` / ``export_chrome(path)`` — Chrome trace-event

@@ -88,6 +88,40 @@ Warm-up cost: every prefill-shape compile (bucket miss or ``prewarm``) is
 wall-timed into ``compile_ema_s``, an EMA exported via ``capacity_now()`` —
 the placer weighs warm-up gaps against it (a one-bucket gap on a tiny model
 is not worth a tier hop).
+
+Cross-request prefix cache (paged engine, ``prefix_cache=True``): finished
+sequences no longer free their pages — they retire them into a radix tree
+(serving/prefix_cache.py) keyed by token-id page runs, and admission
+matches every prompt against that tree first. The slot lifecycle contract
+changes from *release == free* to **release-to-cache vs free**:
+
+* RELEASE-TO-CACHE (the sequence finished normally): the full pages holding
+  its prompt + output K/V transfer their allocator reference to the tree
+  (duplicates of already-cached prefixes are freed); only the trailing
+  partial page returns to the free list. The pages stay warm for the next
+  request sharing the prefix.
+* FREE (preemption, or cache off): every page reference is dropped as
+  before — but pages shared with the tree survive under the tree's own
+  reference, so preempting a prefix-hit sequence never invalidates the
+  cache it was reading.
+
+On a prefix HIT, admission attaches the matched pages to the front of the
+new sequence's ``PageTable`` via the same ref-count machinery ``fork``
+uses, pins the matched tree path, and enters the PREFILLING state with the
+chunk cursor AT THE MATCH BOUNDARY — prefill runs only for the unmatched
+suffix (the match is capped one token short of the context so the final
+chunk always has a token to emit logits from). Preemption of a prefix-hit
+sequence drops the pin; re-admission re-matches from scratch, so a resume
+restarts at the *re-validated* boundary (the tree may have grown or evicted
+in between), never blindly at the old one. ``fork`` of a cache-attached
+sequence pins the tree path once more, keeping path pins == attached
+sequences. Cached pages are "free-ish" capacity, not occupancy: whenever an
+allocation would fail, cold (unpinned) tree leaves are evicted LRU-first
+BEFORE any live sequence is preempted, and ``capacity_now()`` exports
+``cached_pages`` / ``evictable_pages`` / ``prefix_hit_rate`` so the placer
+counts evictable cache as reclaimable. The cache requires an attention-only
+decoder: recurrent mixers (mamba/xlstm) carry per-slot state that cached
+pages cannot restore.
 """
 from __future__ import annotations
 
@@ -111,6 +145,7 @@ from repro.serving.paging import (
     bucket_tokens,
     num_buckets,
 )
+from repro.serving.prefix_cache import PrefixCache
 
 
 @dataclass
@@ -134,6 +169,11 @@ class Sequence:
     out: List[int] = field(default_factory=list)
     done: bool = False
     preemptions: int = 0
+    # tokens of this sequence's context served from the prefix cache at its
+    # most recent admission (0 = cold prefill / cache off); re-validated on
+    # every preemption-resume, recorded into the prefix_matched_tokens
+    # histogram by EngineLoop when the sequence finishes
+    cached_tokens: int = 0
     # observability: submit timestamp + one monotonic stamp per emitted
     # token (TTFT = token_times[0] - submit_t; inter-token gaps = diffs).
     # Always recorded — one float append per token, noise next to a device
@@ -283,16 +323,22 @@ class _EngineBase:
         self._chunk_ctx[slot] = None
         self._chunk_carry[slot] = None
 
-    def _begin_chunked(self, slot: int, seq: Sequence) -> None:
+    def _begin_chunked(self, slot: int, seq: Sequence, start: int = 0) -> None:
         """Move ``seq`` into ``slot`` in the PREFILLING state: no device work
         happens here — the budget-gated chunk phase (``_run_chunks``) absorbs
         the context over the following steps. ``slot_len`` tracks the chunk
         cursor so the batched decode's garbage write for this slot always
-        lands on a position the next chunk (or the first decode) rewrites."""
+        lands on a position the next chunk (or the first decode) rewrites.
+
+        ``start`` > 0 (paged engine, prefix-cache hit) begins the cursor at
+        the match boundary: positions below ``start`` are already in cache
+        on pages SHARED with the prefix tree, so no chunk may rewrite them —
+        and since ``start`` is page-aligned, the garbage decode write at the
+        cursor lands on the sequence's first exclusively-owned page."""
         self.slot_seq[slot] = seq
-        self.slot_len[slot] = 0
+        self.slot_len[slot] = start
         self._chunking[slot] = True
-        self._chunk_pos[slot] = 0
+        self._chunk_pos[slot] = start
         self._chunk_ctx[slot] = seq.context_tokens()
         self._chunk_carry[slot] = self.model.init_chunk_state()
         self._stamp[slot] = self._stamp_next
@@ -301,6 +347,7 @@ class _EngineBase:
             seq.trace.event(
                 "admitted", lane=seq.lane, slot=slot, chunked=True,
                 ctx_tokens=len(self._chunk_ctx[slot]), resume=seq.preemptions,
+                cached_tokens=start,
             )
 
     def _prefilling_slots(self) -> List[int]:
@@ -310,10 +357,18 @@ class _EngineBase:
             key=lambda i: self._stamp[i],
         )
 
+    @property
+    def _chunk_unit(self) -> int:
+        """Tokens absorbed per chunk step: the chunk size, or the full length
+        cap when chunked prefill is off but the chunk machinery still runs
+        (paged engine with the prefix cache on — a whole unmatched suffix is
+        then one "chunk")."""
+        return self._chunk_tokens or self._len_cap
+
     def _next_chunk_cost(self, slot: int) -> int:
         """Padded length of the slot's next chunk (budget accounting)."""
         remaining = len(self._chunk_ctx[slot]) - int(self._chunk_pos[slot])
-        return self._bucket_len(min(remaining, self._chunk_tokens), self._chunk_tokens)
+        return self._bucket_len(min(remaining, self._chunk_unit), self._chunk_unit)
 
     def _run_chunks(self, spent: int, budget: int) -> int:
         """Budget-gated chunk phase: serve PREFILLING slots in admission
@@ -343,8 +398,8 @@ class _EngineBase:
         seq = self.slot_seq[slot]
         ctx = self._chunk_ctx[slot]
         pos = int(self._chunk_pos[slot])
-        piece = ctx[pos : pos + self._chunk_tokens]
-        toks, n, _, fresh = self._pad_context(piece, cap=self._chunk_tokens)
+        piece = ctx[pos : pos + self._chunk_unit]
+        toks, n, _, fresh = self._pad_context(piece, cap=self._chunk_unit)
         tr = seq.trace
         tr0 = time.monotonic() if tr is not None else 0.0
         t0 = time.perf_counter()
@@ -694,6 +749,12 @@ class PagedEngineConfig:
                                  # (snapped to a page multiple)
     step_token_budget: int = 0   # per-step prefill+decode token budget
                                  # (0 = auto: 2*chunk_tokens chunked, cap not)
+    prefix_cache: bool = False   # cross-request prefix cache: finished
+                                 # sequences retire their pages into a radix
+                                 # tree; new prompts skip prefill for cached
+                                 # prefixes (attention-only decoders). Off by
+                                 # default: release-to-cache retains pages, a
+                                 # semantic change callers must opt into.
 
     @property
     def table_width(self) -> int:
@@ -732,6 +793,14 @@ class PagedInferenceEngine(_EngineBase):
                 f"num_pages={pcfg.num_pages} cannot hold one max_seq_len={pcfg.max_seq_len} "
                 f"sequence ({pcfg.table_width} pages + reserved null page)"
             )
+        if pcfg.prefix_cache and (
+            any(kind != "attn" for kind in cfg.block_pattern)
+            or getattr(cfg, "encoder", None) is not None
+        ):
+            raise ValueError(
+                "prefix_cache requires an attention-only decoder: recurrent "
+                "mixers carry per-slot state that cached pages cannot restore"
+            )
         self.model = get_model(cfg)
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
         self._max_new, self._eos, self._len_cap = pcfg.max_new_tokens, pcfg.eos_id, pcfg.max_seq_len
@@ -747,6 +816,10 @@ class PagedInferenceEngine(_EngineBase):
         B, P = pcfg.max_slots, pcfg.table_width
         self.cache = self.model.init_paged_cache(B, pcfg.num_pages, pcfg.page_size)
         self.allocator = BlockAllocator(pcfg.num_pages, pcfg.page_size)
+        self.prefix_cache: Optional[PrefixCache] = (
+            PrefixCache(self.allocator, pcfg.page_size) if pcfg.prefix_cache else None
+        )
+        self._cache_nodes: List[Optional[object]] = [None] * B  # pinned tree path per slot
         self.tables: List[Optional[PageTable]] = [None] * B
         self.slot_len = np.zeros(B, np.int32)
         self.slot_seq: List[Optional[Sequence]] = [None] * B
@@ -843,8 +916,13 @@ class PagedInferenceEngine(_EngineBase):
 
     def capacity_now(self) -> Dict[str, int]:
         """Live capacity snapshot: what the StraightLine placer consumes
-        instead of a static ``capacity`` constant."""
-        return {
+        instead of a static ``capacity`` constant. With the prefix cache on
+        it additionally exports ``cached_pages`` / ``evictable_pages`` /
+        ``prefix_hit_rate`` / ``prefix_cached_tokens`` — evictable cache is
+        reclaimable capacity the placer may count as free-ish (the keys are
+        absent when the cache is off, and StraightLinePolicy stays
+        byte-faithful to Algorithm 1 without them)."""
+        snap = {
             "free_slots": self.free_slots(),
             "num_slots": self.pcfg.max_slots,
             "free_pages": self.allocator.free_pages,
@@ -859,13 +937,25 @@ class PagedInferenceEngine(_EngineBase):
             "prefill_backlog_tokens": self.prefill_backlog_tokens(),
             "chunk_tokens": self._chunk_tokens,
         }
+        pc = self.prefix_cache
+        if pc is not None:
+            snap["cached_pages"] = pc.cached_pages
+            snap["evictable_pages"] = pc.evictable_pages()
+            snap["prefix_hit_rate"] = pc.hit_rate
+            snap["prefix_cached_tokens"] = pc.matched_tokens_total
+        return snap
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
         """How many requests of ~est_tokens context the engine can admit now
-        (page- and slot-bounded). est_tokens=0 assumes a one-page sequence."""
+        (page- and slot-bounded). est_tokens=0 assumes a one-page sequence.
+        Evictable prefix-cache pages count as free: admission reclaims them
+        before it would ever report the pool full."""
         est = max(1, est_tokens)
         per_seq = PageTable.pages_needed(est + 1, self.pcfg.page_size)
-        return min(self.free_slots(), self.allocator.free_pages // per_seq)
+        pages = self.allocator.free_pages
+        if self.prefix_cache is not None:
+            pages += self.prefix_cache.evictable_pages()
+        return min(self.free_slots(), pages // per_seq)
 
     # -- public API -------------------------------------------------------------
     def _prewarm_shape(self, Lp: int, slot: int) -> None:
@@ -873,11 +963,12 @@ class PagedInferenceEngine(_EngineBase):
         block-table row: K/V writes land on the reserved null page (garbage
         by design) and the idle slot's recurrent state is rewritten from
         zero on any real install. The cache is reassigned because the paged
-        prefill donates its buffer. With chunked prefill on, the CHUNK path
-        is what traffic runs, so that is what gets compiled."""
+        prefill donates its buffer. With chunked prefill on — or the prefix
+        cache, whose admissions all ride the chunk machinery — the CHUNK
+        path is what traffic runs, so that is what gets compiled."""
         toks = np.zeros(Lp, np.int32)
         row = np.full(self.pcfg.table_width, NULL_PAGE, np.int32)
-        if self._chunk_tokens:
+        if self._chunk_tokens or self.prefix_cache is not None:
             _, self.cache, _ = self._prefill_chunk(
                 self.params, self.cache, jnp.asarray(toks), jnp.asarray(row),
                 jnp.asarray(slot), jnp.asarray(0), jnp.asarray(1),
@@ -940,8 +1031,44 @@ class PagedInferenceEngine(_EngineBase):
         self._stamp_next += 1
         return int(nxt)
 
-    def _release(self, slot: int) -> None:
-        self.tables[slot].release(self.allocator)
+    def _reserve_pages(self, n: int, seq: Optional[Sequence] = None) -> bool:
+        """Make ``n`` pages allocatable, reclaiming cold prefix-cache leaves
+        (LRU-first) before the caller has to preempt any live sequence —
+        cached pages are reclaimable capacity, not occupancy. Returns whether
+        ``alloc(n)`` can now succeed."""
+        if self.allocator.can_alloc(n):
+            return True
+        if self.prefix_cache is not None:
+            freed = self.prefix_cache.evict(n - self.allocator.free_pages)
+            if freed and seq is not None and seq.trace is not None:
+                seq.trace.event("prefix_evict", lane=seq.lane,
+                                freed_pages=freed, need_pages=n)
+        return self.allocator.can_alloc(n)
+
+    def _release(self, slot: int, to_cache: bool = True) -> None:
+        """Tear down a slot. With the prefix cache on and ``to_cache`` (the
+        sequence FINISHED — not preempted), its full pages retire into the
+        radix tree instead of the free list: the tree either adopts the
+        sequence's page reference or, for prefixes it already holds, frees
+        the duplicate. Only the trailing partial page is actually freed. A
+        preemption (``to_cache=False``) drops every reference as before —
+        pages shared with the tree survive under the tree's own reference."""
+        seq = self.slot_seq[slot]
+        table = self.tables[slot]
+        node = self._cache_nodes[slot]
+        self._cache_nodes[slot] = None
+        if node is not None:
+            self.prefix_cache.release(node)   # unpin the matched path
+        if (self.prefix_cache is not None and to_cache
+                and seq is not None and not self._chunking[slot]):
+            toks = seq.context_tokens()[: int(self.slot_len[slot])]
+            n_full = len(toks) // self.pcfg.page_size
+            self.prefix_cache.insert(toks, table.pages[:n_full])
+            self.allocator.free(table.pages[n_full:])    # partial tail only
+            table.pages = []
+            table.num_tokens = 0
+        else:
+            table.release(self.allocator)
         self.tables[slot] = None
         self.slot_seq[slot] = None
         self.slot_len[slot] = 0
@@ -949,6 +1076,7 @@ class PagedInferenceEngine(_EngineBase):
         self._stamp[slot] = 0
         # a preempted PREFILLING slot drops its chunk progress: re-admission
         # restarts the chunked prefill from scratch with a fresh zero carry
+        # (and re-matches the prefix cache, re-validating the boundary)
         self._clear_chunk_slot(slot)
 
     _release_slot = _release          # shared _chunk_step hook (see _EngineBase)
@@ -960,7 +1088,13 @@ class PagedInferenceEngine(_EngineBase):
         reserved up front (the growth-before-admission invariant still
         holds — a decode token mid-prefill always lands on an allocated
         page) and the slot enters PREFILLING; the chunk phase spends the
-        budget. Returns the updated spend."""
+        budget. With the prefix cache on, the context is matched against the
+        radix tree BEFORE chunking: matched pages go to the front of the
+        page table (one extra allocator reference each), only the suffix is
+        freshly allocated, and the chunk cursor starts at the match boundary
+        — every admission then rides the chunk machinery (a whole unmatched
+        suffix is one chunk when chunking is off). Returns the updated
+        spend."""
         budget = budget or self.step_budget
         admitted = False
         while self.waiting:
@@ -968,8 +1102,32 @@ class PagedInferenceEngine(_EngineBase):
             if slot is None:
                 break
             seq = self.waiting[0]
-            ctx_len = len(seq.context_tokens())
+            ctx_toks = seq.context_tokens()
+            ctx_len = len(ctx_toks)
             need = PageTable.pages_needed(ctx_len + 1, self.pcfg.page_size)
+            if self.prefix_cache is not None:
+                hit_pages, hit_node, hit_tokens = self.prefix_cache.acquire(ctx_toks)
+                if not self._reserve_pages(need - len(hit_pages), seq):
+                    self.prefix_cache.cancel(hit_pages, hit_node)
+                    break                                # page-gated admission
+                self.waiting.popleft()
+                if seq.trace is not None:
+                    seq.trace.event(
+                        "prefix_hit" if hit_tokens else "prefix_miss",
+                        lane=seq.lane, matched_tokens=hit_tokens,
+                        ctx_tokens=ctx_len,
+                    )
+                seq.cached_tokens = hit_tokens
+                table = PageTable(
+                    self.pcfg.page_size,
+                    hit_pages + self.allocator.alloc(need - len(hit_pages)),
+                )
+                table.num_tokens = ctx_len
+                self.tables[slot] = table
+                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+                self._cache_nodes[slot] = hit_node
+                self._begin_chunked(slot, seq, start=hit_tokens)
+                continue
             if not self.allocator.can_alloc(need):
                 break                                    # page-gated admission
             if self._chunk_tokens:
@@ -1010,22 +1168,20 @@ class PagedInferenceEngine(_EngineBase):
             seq.trace.event("preempted", lane=seq.lane, slot=victim,
                             n_out=len(seq.out), preemptions=seq.preemptions)
         self.waiting.appendleft(seq)
-        self._release(victim)
+        self._release(victim, to_cache=False)
         active.remove(victim)
         return victim
 
     def _ensure_growth(self, active: List[int]) -> None:
         """Every active slot writes one token at position slot_len this step;
-        allocate the page that position lands in, preempting the newest
-        sequence when the pool is dry."""
+        allocate the page that position lands in. When the pool is dry, cold
+        prefix-cache leaves are evicted FIRST (reclaimable capacity); only
+        when nothing evictable remains is the newest sequence preempted."""
         for slot in sorted(active, key=lambda i: self._stamp[i]):
             if slot not in active:
                 continue
             while self.tables[slot].capacity_tokens <= self.slot_len[slot]:
-                try:
-                    self.tables[slot].append_pages(self.allocator.alloc(1))
-                    self.block_tab[slot, :] = self.tables[slot].row(self.pcfg.table_width)
-                except OutOfPages:
+                if not self._reserve_pages(1, self.slot_seq[slot]):
                     if active == [slot]:
                         raise RuntimeError(
                             "page pool too small to grow the only active sequence; "
@@ -1034,6 +1190,9 @@ class PagedInferenceEngine(_EngineBase):
                     preempted = self._preempt_newest(active)
                     if preempted == slot:
                         break
+                    continue
+                self.tables[slot].append_pages(self.allocator.alloc(1))
+                self.block_tab[slot, :] = self.tables[slot].row(self.pcfg.table_width)
 
     def step(self) -> List[Sequence]:
         """Grow + admit (budget-gated) + chunk work + one decode step;
@@ -1057,7 +1216,7 @@ class PagedInferenceEngine(_EngineBase):
                 if s is not None and not self._chunking[i]
             )
             spent = self._admit(spent, budget)
-            if self._chunk_tokens:
+            if self._chunk_tokens or self.prefix_cache is not None:
                 self._run_chunks(spent, budget)
             finished, self._just_finished = self._just_finished, []
             active = [
@@ -1104,13 +1263,23 @@ class PagedInferenceEngine(_EngineBase):
                 # mid-prefill: the authoritative recurrent state is in the
                 # off-cache carry, not the slot — nothing coherent to clone
                 return None
+            src_table = self.tables[src]
+            cow_pages = len(src_table.pages) - src_table.num_tokens // self.pcfg.page_size
+            if not self._reserve_pages(cow_pages, self.slot_seq[src]):
+                return None                   # even evicting cache can't cover CoW
             try:
-                new_table = self.tables[src].fork(self.allocator)
+                new_table = src_table.fork(self.allocator)
             except OutOfPages:
                 return None
             seq = self.slot_seq[src]
             clone = Sequence(self._sid, list(seq.prompt), out=list(seq.out),
-                             submit_t=time.monotonic(), trace=seq.trace)
+                             submit_t=time.monotonic(), trace=seq.trace,
+                             cached_tokens=seq.cached_tokens)
+            if self._cache_nodes[src] is not None:
+                # the clone shares the source's cache-attached pages: it must
+                # hold the tree path too, or the source finishing would leave
+                # the path evictable under the still-running clone
+                self._cache_nodes[dst] = self.prefix_cache.pin(self._cache_nodes[src])
             self._sid += 1
             n_full = new_table.num_tokens // self.pcfg.page_size
             src_part = self.tables[src].pages[n_full:]

@@ -121,9 +121,13 @@ class BlockAllocator:
     def ref_count(self, page: int) -> int:
         return self._refs.get(page, 0)
 
-    def free(self, pages: List[int]) -> None:
+    def free(self, pages: List[int]) -> int:
         """Drop one reference per page; pages return to the free list only
-        when the last reference dies."""
+        when the last reference dies. Returns how many pages actually came
+        back to the free list (shared pages survive their co-holders), so
+        the prefix cache's eviction can report *reclaimed* capacity rather
+        than references dropped."""
+        freed = 0
         for p in pages:
             if p not in self._refs:
                 raise ValueError(f"double free of page {p}")
@@ -131,6 +135,8 @@ class BlockAllocator:
             if self._refs[p] == 0:
                 del self._refs[p]
                 self._free.append(p)
+                freed += 1
+        return freed
 
     def check_invariants(self) -> None:
         """free + used = num_pages - 1 (null page); no page in both sets."""

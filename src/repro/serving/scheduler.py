@@ -21,7 +21,12 @@ loop and returns a ticket, ``Backend.wait_fn`` blocks on it — the router
 worker sleeps on a future while the loop batches its sequence with everyone
 else's. ``capacity_now()`` re-exports the engine snapshot plus the loop's
 occupancy telemetry (``active_slots`` / ``batch_occupancy`` /
-``queue_depth``) so the placer sees true interleaved capacity.
+``queue_depth``) so the placer sees true interleaved capacity — including,
+for engines with a cross-request prefix cache, ``cached_pages`` /
+``evictable_pages`` / ``prefix_hit_rate`` (evictable cache counts as
+reclaimable free capacity; see serving/prefix_cache.py). Finished
+sequences additionally record ``prefix_matched_tokens`` /
+``prefix_cache_hit_ratio`` into the metrics registry.
 
 Failure contract: an exception escaping ``engine.step()`` poisons the loop —
 every pending and future waiter gets the error (wrapped in RuntimeError),
@@ -48,7 +53,7 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.core.telemetry import MetricsRegistry, default_registry
+from repro.core.telemetry import MetricsRegistry, default_registry, log_buckets
 from repro.core.tracing import Trace, trace_now
 from repro.serving.engine import Sequence
 
@@ -268,8 +273,11 @@ class EngineLoop:
     def _observe_finished(self, seq: Sequence) -> None:
         """Per-sequence terminal observability: TTFT / inter-token-latency
         histogram observations from the engine-stamped token times, token
-        throughput counters, and the trace hand-off (per-token instants onto
-        the sequence's engine lane)."""
+        throughput counters, prefix-cache metrics (engines with a prefix
+        cache: per-sequence matched tokens into the ``prefix_matched_tokens``
+        histogram — misses observe 0 so the hit ratio is derivable — plus
+        the cache-wide hit-ratio gauge), and the trace hand-off (per-token
+        instants onto the sequence's engine lane)."""
         labels = {"engine": self.name}
         times = seq.token_times
         if times:
@@ -280,6 +288,15 @@ class EngineLoop:
             for a, b in zip(times, times[1:]):
                 itl.observe(max(0.0, b - a))
         self.registry.counter("engine_tokens_total", labels).inc(len(seq.out))
+        pc = getattr(self.engine, "prefix_cache", None)
+        if pc is not None:
+            self.registry.histogram(
+                "prefix_matched_tokens", labels, bounds=log_buckets(1.0, 2.0, 16)
+            ).observe(float(seq.cached_tokens))
+            self.registry.counter(
+                "prefix_cached_tokens_total", labels
+            ).inc(seq.cached_tokens)
+            self.registry.gauge("prefix_cache_hit_ratio", labels).set(pc.hit_rate)
         if seq.trace is not None:
             lane = f"engine-sid{seq.sid}"
             seq.trace.add_tokens(lane, times)

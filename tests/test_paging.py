@@ -18,6 +18,7 @@ from repro.serving.engine import (
     PagedInferenceEngine,
 )
 from repro.serving.paging import NULL_PAGE, BlockAllocator, OutOfPages, PageTable
+from repro.serving.prefix_cache import PrefixCache
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +161,111 @@ def test_allocator_pagetable_invariants_under_random_interleavings(ops):
 
     for t in tables:
         t.release(alloc)
+    alloc.check_invariants()
+    assert alloc.used_pages == 0
+    assert alloc.free_pages == alloc.num_pages - 1
+
+
+def _stream(family: int, n: int):
+    """Deterministic token stream for one prompt family: families sharing a
+    base share a 10-token prefix (2.5 pages at PS=4 — real prefix overlap
+    AND mid-node splits), then diverge."""
+    base = family % 3
+    return [base if i < 10 else base + 3 * (1 + family % 2) for i in range(n)]
+
+
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["admit", "preempt", "fork", "grow", "free",
+                             "cache", "evict"]),
+            st.integers(0, 15),            # which live sequence the op targets
+            st.integers(0, 5),             # prompt family (shared prefixes)
+            st.integers(1, 14),            # admit context length / evict count
+        ),
+        min_size=1,
+        max_size=80,
+    )
+)
+@settings(max_examples=120, deadline=None)
+def test_prefix_cache_allocator_invariants_under_random_interleavings(ops):
+    """The radix-tree prefix cache interleaved with the full sequence
+    lifecycle — admit (match-on-admit: acquire + alloc the suffix), preempt
+    (drop every reference, cache survives), fork (prefix sharing + path
+    pin), grow, free, release-to-cache (insert full pages, free the tail)
+    and LRU eviction — asserting after every op that (a) the allocator's
+    free/used partition is exact, (b) every page's ref-count equals live
+    tables holding it plus the tree's single reference, and (c) the tree's
+    structural/counter invariants hold. Finally releasing everything and
+    dropping the cache must return the pool to fully free."""
+    PS = 4
+    alloc = BlockAllocator(num_pages=17, page_size=PS)
+    cache = PrefixCache(alloc, PS)
+    live = []                                   # (table, tokens, node-or-None)
+
+    def check():
+        alloc.check_invariants()
+        cache.check_invariants()
+        held = Counter(p for t, _, _ in live for p in t.pages)
+        tree_pages = set(cache.pages())
+        for page in set(held) | tree_pages:
+            expect = held.get(page, 0) + (1 if page in tree_pages else 0)
+            assert alloc.ref_count(page) == expect, (page, expect)
+        assert alloc.used_pages == len(set(held) | tree_pages)
+        assert alloc.free_pages == alloc.num_pages - 1 - alloc.used_pages
+
+    for op, idx, family, n in ops:
+        if op == "admit":
+            toks = _stream(family, n)
+            need = PageTable.pages_needed(len(toks) + 1, PS)
+            pages, node, matched = cache.acquire(toks)
+            if alloc.can_alloc(need - len(pages)):
+                t = PageTable(PS, pages + alloc.alloc(need - len(pages)),
+                              num_tokens=len(toks))
+                live.append((t, toks, node))
+            else:
+                cache.cancel(pages, node)        # failed admission leaks nothing
+        elif op == "preempt" and live:           # == free: recompute-resume
+            t, _, node = live.pop(idx % len(live))
+            if node is not None:
+                cache.release(node)
+            t.release(alloc)
+        elif op == "fork" and live:
+            t, toks, node = live[idx % len(live)]
+            try:
+                f = t.fork(alloc)
+            except OutOfPages:
+                continue                         # failed fork must leak nothing
+            live.append((f, list(toks), cache.pin(node) if node is not None else None))
+        elif op == "grow" and live:
+            t, toks, node = live[idx % len(live)]
+            if t.capacity_tokens <= t.num_tokens:
+                if not alloc.can_alloc(1):
+                    continue
+                t.append_pages(alloc.alloc(1))
+            toks.append(_stream(family, t.num_tokens + 1)[-1])
+            t.num_tokens += 1
+        elif op == "free" and live:
+            t, _, node = live.pop(idx % len(live))
+            if node is not None:
+                cache.release(node)
+            t.release(alloc)
+        elif op == "cache" and live:             # release-to-cache
+            t, toks, node = live.pop(idx % len(live))
+            if node is not None:
+                cache.release(node)
+            n_full = len(toks) // PS
+            cache.insert(toks, t.pages[:n_full])
+            alloc.free(t.pages[n_full:])
+        elif op == "evict":
+            cache.evict(n)
+        check()
+
+    for t, _, node in live:
+        if node is not None:
+            cache.release(node)
+        t.release(alloc)
+    cache.drop()
     alloc.check_invariants()
     assert alloc.used_pages == 0
     assert alloc.free_pages == alloc.num_pages - 1

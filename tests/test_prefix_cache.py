@@ -1,0 +1,388 @@
+"""Cross-request prefix cache: radix-tree unit tests, engine integration
+(token parity warm vs cold, chunk cursor at the match boundary, fork
+pinning, mid-prefill preemption re-validation, eviction-before-preemption),
+and the capacity/metrics exports."""
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import CapacityGauge
+from repro.core.telemetry import (
+    MetricsRegistry,
+    MonitorSampler,
+    cached_pages,
+    prefix_hit_rate,
+    reclaimable_pages,
+)
+from repro.serving.engine import (
+    EngineConfig,
+    InferenceEngine,
+    PagedEngineConfig,
+    PagedInferenceEngine,
+)
+from repro.serving.paging import BlockAllocator, PageTable
+from repro.serving.prefix_cache import PrefixCache
+
+
+def _smoke(arch="smollm-360m"):
+    return get_config(arch, smoke=True).replace(attn_chunk=64)
+
+
+# ---------------------------------------------------------------------------
+# Radix tree over a BlockAllocator (no model)
+# ---------------------------------------------------------------------------
+
+PS = 4
+
+
+def _cache(num_pages=20):
+    a = BlockAllocator(num_pages=num_pages, page_size=PS)
+    return a, PrefixCache(a, PS)
+
+
+def test_acquire_miss_insert_then_hit_shares_pages():
+    a, pc = _cache()
+    toks = list(range(10))                        # 2 full pages + partial
+    pages, node, matched = pc.acquire(toks)
+    assert (pages, node, matched) == ([], None, 0)
+    seq_pages = a.alloc(3)
+    assert pc.insert(toks, seq_pages[:2]) == 2    # adopts the seq's 2 full pages
+    a.free(seq_pages[2:])                         # partial tail really freed
+    assert pc.cached_pages == 2 and a.used_pages == 2
+    pages, node, matched = pc.acquire(toks)
+    assert matched == 8 and pages == seq_pages[:2]
+    assert all(a.ref_count(p) == 2 for p in pages)  # tree + acquirer
+    assert node.holders == 1 and pc.evictable_pages() == 0
+    pc.release(node)
+    a.free(pages)
+    assert pc.evictable_pages() == 2
+    pc.check_invariants()
+    a.check_invariants()
+
+
+def test_acquire_capped_one_token_short_of_context():
+    """A fully-cached context must still leave >= 1 token to prefill — the
+    final chunk produces the next-token logits."""
+    a, pc = _cache()
+    toks = list(range(8))                         # exactly 2 pages
+    pages = a.alloc(2)
+    pc.insert(toks, pages)
+    got, node, matched = pc.acquire(toks)
+    assert matched == 4 and len(got) == 1         # (8-1)//4 = 1 page, not 2
+    pc.cancel(got, node)
+    pc.check_invariants()
+
+
+def test_insert_splits_node_at_divergence_and_frees_duplicates():
+    a, pc = _cache()
+    shared = [7] * 8                              # 2 shared full pages
+    s1, s2 = shared + [1] * 4, shared + [2] * 4
+    p1 = a.alloc(3)
+    pc.insert(s1, p1)
+    assert len(pc.nodes()) == 1                   # one 3-page run
+    p2 = a.alloc(3)
+    pc.insert(s2, p2)
+    # duplicates of the shared prefix freed, divergent page adopted
+    assert pc.cached_pages == 4 and a.used_pages == 4
+    nodes = pc.nodes()
+    assert len(nodes) == 3                        # split parent + two leaves
+    parent = next(n for n in nodes if n.children)
+    assert len(parent.pages) == 2 and parent.pages == p1[:2]
+    leaf_pages = sorted(p for n in nodes if not n.children for p in n.pages)
+    assert leaf_pages == sorted([p1[2], p2[2]])
+    # a mid-prefix acquire matches through the split parent only
+    got, node, matched = pc.acquire(shared + [9])
+    assert matched == 8 and got == p1[:2] and node is parent
+    pc.cancel(got, node)
+    pc.check_invariants()
+    a.check_invariants()
+
+
+def test_lru_eviction_drops_cold_unpinned_leaves_first():
+    a, pc = _cache()
+    cold, warm = [1] * 8, [2] * 8
+    pc.insert(cold + [0], a.alloc(2))             # 9 tokens: 2 full pages
+    pc.insert(warm + [0], a.alloc(2))
+    pc.acquire(warm + [9])                        # touches + re-pins warm
+    got, node, _ = pc.acquire(cold + [9])         # touch cold LAST...
+    pc.cancel(got, node)                          # ...but leave it UNPINNED
+    # warm is pinned: despite being older by LRU it must survive
+    freed = pc.evict(10)
+    assert freed == 2                             # only the cold leaf went
+    assert pc.cached_pages == 2 and pc.evictions == 1
+    remaining = {tuple(k for k in n.keys[0]) for n in pc.nodes()}
+    assert remaining == {(2, 2, 2, 2)}
+    pc.check_invariants()
+    a.check_invariants()
+
+
+def test_evict_reports_actually_reclaimed_pages_only():
+    """Pages still shared with a live sequence don't return to the free
+    list when their tree leaf dies — evict() must not count them."""
+    a, pc = _cache()
+    toks = [3] * 12
+    pc.insert(toks, a.alloc(3))
+    got, node, matched = pc.acquire(toks)
+    assert matched == 8                           # capped: 2 of 3 pages
+    pc.release(node)                              # unpin, but KEEP the shares
+    free_before = a.free_pages
+    assert pc.evict(3) == 1                       # only the unshared 3rd page
+    assert a.free_pages == free_before + 1
+    a.free(got)                                   # the "sequence" lets go
+    assert a.free_pages == free_before + 3
+    pc.check_invariants()
+    a.check_invariants()
+
+
+def test_drop_restores_pool_and_path_pin_counters_balance():
+    a, pc = _cache()
+    pc.insert([1] * 8 + [0], a.alloc(2))
+    pc.insert([1] * 4 + [2] * 4 + [0], a.alloc(2))   # splits the first run
+    got, node, _ = pc.acquire([1] * 8 + [9])
+    for n in pc.nodes():
+        assert (n.holders == 1) == (n in _path(node))
+    pc.release(node)
+    a.free(got)
+    assert pc.evictable_pages() == pc.cached_pages == 3
+    assert pc.drop() == 3
+    a.check_invariants()
+    assert a.used_pages == 0 and pc.cached_pages == 0
+
+
+def _path(node):
+    out = []
+    while node is not None and node.parent is not None:
+        out.append(node)
+        node = node.parent
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: parity, boundary, fork, preemption, eviction ordering
+# ---------------------------------------------------------------------------
+
+SYS = list(range(1, 26))                          # 25-token shared "system prompt"
+
+
+def _paged(cfg, prefix_cache=True, chunk_tokens=0, num_pages=60, max_new=6,
+           page_size=4, max_slots=4, max_seq_len=64, params=None, **kw):
+    return PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(
+            page_size=page_size, num_pages=num_pages, max_slots=max_slots,
+            max_seq_len=max_seq_len, max_new_tokens=max_new,
+            chunk_tokens=chunk_tokens, prefix_cache=prefix_cache, **kw,
+        ),
+        params=params,
+    )
+
+
+@pytest.mark.parametrize("chunk_tokens", [0, 8])
+def test_warm_prefix_token_parity_and_boundary(chunk_tokens):
+    """Greedy outputs with a cached prefix must be identical to cold prefill
+    — and the chunk cursor must start at the page-aligned match boundary."""
+    cfg = _smoke()
+    eng = _paged(cfg, chunk_tokens=chunk_tokens)
+    cold = eng.generate([SYS + [30, 31, 32]])[0]
+    assert cold.cached_tokens == 0
+    warm = eng.generate([SYS + [30, 31, 32]])[0]
+    # 28-token context: (28-1)//4 = 6 pages = 24 tokens served from cache
+    assert warm.cached_tokens == 24
+    assert warm.out == cold.out
+    div = eng.generate([SYS + [40]])[0]           # same SYS, different tail
+    assert div.cached_tokens == 24                # 26-token ctx: (26-1)//4=6 pages
+    eng.prefix_cache.check_invariants()
+    eng.allocator.check_invariants()
+    # reference: an engine with the cache OFF produces the same tokens
+    ref = _paged(cfg, prefix_cache=False, chunk_tokens=chunk_tokens,
+                 params=eng.params).generate([SYS + [30, 31, 32]])[0]
+    assert ref.out == cold.out
+
+
+def test_cached_prefix_matches_dense_engine():
+    cfg = _smoke()
+    dense = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=64, max_new_tokens=6))
+    d = dense.generate([SYS + [30, 31, 32]])[0]
+    eng = _paged(cfg, params=dense.params)
+    eng.generate([SYS + [30, 31, 32]])            # populate
+    warm = eng.generate([SYS + [30, 31, 32]])[0]
+    assert warm.cached_tokens > 0 and warm.out == d.out
+
+
+def test_release_to_cache_retains_pages_cache_off_frees_them():
+    cfg = _smoke()
+    on = _paged(cfg)
+    on.generate([SYS + [30]])
+    assert on.allocator.used_pages == on.prefix_cache.cached_pages > 0
+    off = _paged(cfg, prefix_cache=False, params=on.params)
+    off.generate([SYS + [30]])
+    assert off.allocator.used_pages == 0          # legacy lifecycle unchanged
+
+
+def test_fork_of_cache_attached_sequence_pins_tree_path():
+    """Satellite regression: a fork sharing cache-attached pages must hold
+    the tree path too — the source finishing (or being preempted) must not
+    leave the clone decoding from evictable pages."""
+    cfg = _smoke()
+    eng = _paged(cfg, max_new=8)
+    eng.generate([SYS + [30, 31, 32]])            # populate the tree
+    sid = eng.submit(SYS + [30, 31, 32])
+    for _ in range(10):                           # absorb prefill, decode a bit
+        eng.step()
+        slot = next((i for i, s in enumerate(eng.slot_seq) if s is not None), None)
+        if slot is not None and not eng._chunking[slot]:
+            break
+    node = eng._cache_nodes[slot]
+    assert node is not None and node.holders == 1
+    csid = eng.fork(sid)
+    assert csid is not None
+    assert node.holders == 2                      # clone pinned the path
+    clone_slot = next(i for i, s in enumerate(eng.slot_seq)
+                      if s is not None and s.sid == csid)
+    assert eng.slot_seq[clone_slot].cached_tokens == eng.slot_seq[slot].cached_tokens
+    # evicting now must not touch the pinned path
+    assert eng.prefix_cache.evict(100) == 0 or node.holders == 2
+    done = {}
+    for _ in range(60):
+        for s in eng.step():
+            done[s.sid] = s.out
+        if len(done) == 2:
+            break
+    assert done[sid] == done[csid]                # greedy clones identical
+    assert node.holders == 0                      # pins balanced on release
+    eng.prefix_cache.check_invariants()
+    eng.allocator.check_invariants()
+
+
+def test_mid_prefill_preemption_restarts_at_revalidated_boundary():
+    """Satellite regression: preempting a prefix-hit sequence mid-prefill
+    must re-match on resume — cursor at the re-validated boundary — and
+    still produce the cold-prefill tokens. The eviction variant (cache
+    dropped while parked) must degrade to a cold restart, same tokens."""
+    cfg = _smoke()
+    prompt = SYS + list(range(30, 46))            # 41-token ctx, long fresh tail
+    ample = _paged(cfg, chunk_tokens=4, num_pages=80)
+    ample.generate([SYS + [99]])                  # populate the shared prefix
+    ref = ample.generate([prompt])[0]
+    assert ref.cached_tokens == 24                # divergence at the SYS boundary
+
+    for evict_while_parked in (False, True):
+        eng = _paged(cfg, chunk_tokens=4, num_pages=80, params=ample.params)
+        eng.generate([SYS + [99]])                # populate the tree
+        sid = eng.submit(prompt)
+        eng.step()                                # admit + first chunk only
+        slot = next(i for i, s in enumerate(eng.slot_seq) if s is not None)
+        seq = eng.slot_seq[slot]
+        assert eng._chunking[slot] and seq.cached_tokens == 24
+        assert int(eng._chunk_pos[slot]) >= 24    # cursor began at the boundary
+        with eng.lock:                            # deterministic mid-prefill preempt
+            eng._preempt_newest([slot])
+        assert seq.preemptions == 1
+        if evict_while_parked:
+            assert eng.prefix_cache.evict(10_000) > 0
+            assert eng.prefix_cache.cached_pages == 0
+        done = []
+        for _ in range(60):
+            done += eng.step()
+            if done:
+                break
+        (res,) = done
+        assert res.sid == sid and res.out == ref.out
+        # boundary re-validated on resume: full re-match normally, cold
+        # restart (0) when the cache was evicted under it
+        assert res.cached_tokens == (0 if evict_while_parked else 24)
+        eng.prefix_cache.check_invariants()
+        eng.allocator.check_invariants()
+
+
+def test_eviction_reclaims_cold_leaves_before_any_preemption():
+    """Cached pages are reclaimable capacity: under page pressure the engine
+    must drain cold tree leaves and never preempt a live sequence while any
+    evictable leaf remains."""
+    cfg = _smoke()
+    # 15 usable pages of 4 tokens; cache fills with finished sequences (11
+    # prompt + 8 output tokens = 4 full pages each), then a burst of fresh
+    # (unshared) prompts needs nearly the whole pool
+    eng = _paged(cfg, num_pages=16, max_slots=2, max_seq_len=32, max_new=8)
+    for t in (50, 60):
+        eng.generate([[t] * 11])
+    assert eng.prefix_cache.cached_pages == 8
+    assert eng.prefix_cache.evictable_pages() == 8
+    out = eng.generate([[70 + i] * 11 for i in range(4)])
+    assert len(out) == 4 and all(len(s.out) == 8 for s in out)
+    assert eng.prefix_cache.evicted_pages_total > 0
+    assert eng.preemptions == 0                   # eviction covered the pressure
+    eng.prefix_cache.check_invariants()
+    eng.allocator.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Capacity / metrics exports
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_now_exports_cache_keys_only_when_enabled():
+    cfg = _smoke()
+    on = _paged(cfg)
+    on.generate([SYS + [30]])
+    snap = on.capacity_now()
+    assert snap["cached_pages"] == on.prefix_cache.cached_pages > 0
+    assert snap["evictable_pages"] == snap["cached_pages"]
+    assert snap["prefix_hit_rate"] == 0.0 and snap["prefix_cached_tokens"] == 0
+    on.generate([SYS + [30]])
+    assert on.capacity_now()["prefix_hit_rate"] > 0
+    off = _paged(cfg, prefix_cache=False, params=on.params)
+    absent = off.capacity_now()
+    for key in ("cached_pages", "evictable_pages", "prefix_hit_rate",
+                "prefix_cached_tokens"):
+        assert key not in absent                  # policy stays byte-faithful
+    # telemetry helpers mirror the presence/absence contract
+    assert cached_pages(snap) > 0 and cached_pages(absent) is None
+    assert prefix_hit_rate(absent) is None
+    assert reclaimable_pages(snap) == snap["free_pages"] + snap["evictable_pages"]
+    assert reclaimable_pages(absent) == absent["free_pages"]
+
+
+def test_admission_capacity_counts_evictable_cache_as_free():
+    cfg = _smoke()
+    eng = _paged(cfg, num_pages=20, max_slots=8, max_seq_len=32, max_new=4)
+    for t in (50, 60, 70):
+        eng.generate([[t] * 11])
+    free = eng.allocator.free_pages
+    evictable = eng.prefix_cache.evictable_pages()
+    assert evictable > 0
+    per_seq = PageTable.pages_needed(12, 4)
+    got = eng.admission_capacity(est_tokens=11)
+    assert got == min(eng.free_slots(), (free + evictable) // per_seq)
+    assert got > free // per_seq                  # the cache widened the view
+
+
+def test_engine_loop_and_sampler_export_prefix_metrics():
+    from repro.serving.scheduler import EngineLoop
+
+    cfg = _smoke()
+    eng = _paged(cfg)
+    reg = MetricsRegistry()
+    loop = EngineLoop(eng, name="paged", registry=reg)
+    with loop:
+        loop.generate([SYS + [30, 31], SYS + [30, 31]], timeout=120)
+        loop.generate([SYS + [30, 31]], timeout=120)
+    text = reg.prometheus_text()
+    assert 'prefix_matched_tokens_bucket{engine="paged"' in text
+    assert 'prefix_cache_hit_ratio{engine="paged"}' in text
+    assert reg.counter("prefix_cached_tokens_total", {"engine": "paged"}).value > 0
+    hist = reg.merged_histogram("prefix_matched_tokens")
+    assert hist.total == 3 and hist.counts[0] >= 1        # misses observe 0
+    # the sampler surfaces the cache keys as a per-tier time series
+    gauge = CapacityGauge()
+    gauge.register_stats("paged", loop.capacity_now)
+    sampler = MonitorSampler(gauge, registry=reg)
+    sampler.sample_once()
+    latest = sampler.latest("paged")
+    assert latest["cached_pages"] > 0 and latest["prefix_hit_rate"] > 0
+    assert reg.gauge("tier_cached_pages", {"tier": "paged"}).value > 0
+
+
+def test_prefix_cache_requires_attention_only_decoder():
+    for arch in ("jamba-1.5-large-398b", "xlstm-350m"):
+        with pytest.raises(ValueError, match="attention-only"):
+            _paged(get_config(arch, smoke=True))
