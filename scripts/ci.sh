@@ -42,6 +42,12 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/chunked_prefill.py
 # silently regress to full prefill nor tax workloads that never hit it.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/prefix_cache.py --fast
 
+# Speculative-decoding smoke: asserts the paged engine emits >= 1.5x the
+# tokens per step with n-gram speculation on (k=4) on a repetitive workload,
+# at byte-identical greedy outputs and a fully reclaimed page pool — the
+# draft/verify path can neither change tokens nor leak speculative pages.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/speculative_decode.py --fast
+
 # Observability overhead gate: disabled tracing must be free (identical
 # outputs, ~0 throughput cost) and enabled tracing + MonitorSampler bounded —
 # instrumentation cannot silently become a tax on the serving hot path.

@@ -200,6 +200,7 @@ class StraightLineRouter:
         self._done_order: Deque[int] = deque()  # completed rids, oldest first
         self._threads: List[threading.Thread] = []
         self._stop_flag = False
+        self._monitor_stop = threading.Event()   # hedge-monitor pacing/stop
         self._policy_takes_warmup = takes_warmup(self.policy)
 
     # -- lifecycle (concurrent runtime) --------------------------------------
@@ -215,6 +216,7 @@ class StraightLineRouter:
         if self._threads:
             raise RuntimeError("router already started")
         self._stop_flag = False
+        self._monitor_stop.clear()
         for b in self.backends.values():
             n = max(1, min(workers_per_tier, b.capacity))
             for i in range(n):
@@ -233,6 +235,7 @@ class StraightLineRouter:
     def stop(self) -> None:
         """Stop the pools; queued-but-unstarted work stays queued."""
         self._stop_flag = True
+        self._monitor_stop.set()     # wakes the hedge monitor immediately
         for b in self.backends.values():
             with b.cond:
                 b.cond.notify_all()
@@ -627,24 +630,34 @@ class StraightLineRouter:
         self._evict_locked()
         return req
 
+    def _hedge_scan(self) -> int:
+        """One staleness pass over the in-flight completions against the
+        INJECTED clock; fires a hedge per straggler found and returns how
+        many fired. Extracted from the monitor loop so fake-clock tests can
+        advance ``self.clock`` and drive hedging deterministically — no
+        monitor thread, no wall-clock sleep in the loop's way."""
+        now = self.clock()
+        with self._lock:
+            stale = [
+                c.request
+                for c in self._completions.values()
+                if not c.done
+                and c.request is not None
+                and not c.request.hedged
+                and c.request.tier not in (None, Tier.SERVERLESS)
+                and now - c.request.arrival_t > self.hedge_after_s
+            ]
+        for req in stale:
+            self._fire_hedge(req)
+        return len(stale)
+
     def _hedge_monitor(self) -> None:
         assert self.hedge_after_s is not None
         tick = min(max(self.hedge_after_s / 4.0, 0.001), 0.05)
-        while not self._stop_flag:
-            time.sleep(tick)
-            now = self.clock()
-            with self._lock:
-                stale = [
-                    c.request
-                    for c in self._completions.values()
-                    if not c.done
-                    and c.request is not None
-                    and not c.request.hedged
-                    and c.request.tier not in (None, Tier.SERVERLESS)
-                    and now - c.request.arrival_t > self.hedge_after_s
-                ]
-            for req in stale:
-                self._fire_hedge(req)
+        # pace on a stop Event, not time.sleep: stop() returns immediately
+        # instead of blocking up to a full tick behind a sleeping monitor
+        while not self._monitor_stop.wait(tick):
+            self._hedge_scan()
 
     # -- serial fallback (benchmark baseline) ----------------------------------
     def poll(self) -> int:

@@ -110,6 +110,19 @@ def prefix_hit_rate(stats: Optional[dict]) -> Optional[float]:
     return None if r is None else min(1.0, max(0.0, float(r)))
 
 
+def spec_acceptance(stats: Optional[dict]) -> Optional[float]:
+    """Speculative-decode acceptance rate — accepted draft tokens over
+    proposed draft tokens — from a ``capacity_now()``-style snapshot. None
+    when speculation is off or the engine has proposed nothing yet (no
+    signal beats a fake 0.0 during warm-up)."""
+    if not stats:
+        return None
+    proposed = stats.get("spec_proposed")
+    if not proposed:
+        return None
+    return min(1.0, max(0.0, stats.get("spec_accepted", 0) / proposed))
+
+
 def reclaimable_pages(stats: Optional[dict]) -> Optional[int]:
     """The placer's free-ish page view: truly free pages plus evictable
     (unpinned) prefix-cache pages, which the engine reclaims before ever
@@ -235,6 +248,11 @@ class CapacityGauge:
         """Free + evictable-cache pages for ``name`` — the capacity view
         that counts cold prefix-cache leaves as reclaimable."""
         return reclaimable_pages(self.stats(name))
+
+    def spec_acceptance(self, name: str) -> Optional[float]:
+        """Speculative-decode acceptance rate for ``name``, or None when
+        speculation is off or nothing has been proposed yet."""
+        return spec_acceptance(self.stats(name))
 
     def snapshot(self) -> Dict[str, int]:
         return {name: max(0, int(p())) for name, p in self._probes.items()}

@@ -12,8 +12,12 @@ machinery. Prefix-cache engines add instants on the sequence's engine lane:
 ``prefix_hit`` / ``prefix_miss`` at admission (with ``matched_tokens``, so
 a Perfetto view shows exactly how much prefill was skipped) and
 ``prefix_evict`` when cold cached leaves are reclaimed to cover an
-allocation (with ``freed_pages``). The result is a bounded ring of finished
-traces exportable two ways:
+allocation (with ``freed_pages``). Speculating engines add one instant per
+verify step on the same lane: ``spec_accept`` when at least one drafted
+token survived verification, ``spec_reject`` when the whole draft was
+thrown away (both carry ``slot`` / ``proposed`` / ``accepted``, so a trace
+shows exactly where the n-gram proposer paid off). The result is a bounded
+ring of finished traces exportable two ways:
 
 * ``Tracer.traces()`` — structured dicts (the test/forecaster surface);
 * ``Tracer.chrome_trace()`` / ``export_chrome(path)`` — Chrome trace-event

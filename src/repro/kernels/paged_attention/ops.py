@@ -16,6 +16,7 @@ from repro.kernels.paged_attention.ref import (
     gather_kv,
     paged_attention_ref,
     paged_prefill_write_ref,
+    paged_verify_write_ref,
 )
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -52,6 +53,18 @@ def paged_prefill_write(pool_k, pool_v, k, v, tab_row, use_pallas: bool = True,
     if use_pallas and Lp % ps == 0:
         return paged_prefill_write_grouped(pool_k, pool_v, k, v, tab, interpret=_INTERPRET)
     return paged_prefill_write_ref(pool_k, pool_v, k, v, tab)
+
+
+def paged_verify_write(pool_k, pool_v, k, v, tab_row, offset):
+    """Scatter a speculative verify stripe's K/V (1, S, KV, hd) through a
+    block-table row at an arbitrary (non-page-multiple) token offset — the
+    write-side of the speculative-decode verify pass. S is k+1 proposal
+    tokens (single digits), far below any Pallas grid's useful occupancy, so
+    the jnp per-token scatter IS the kernel on every path; the read side
+    reuses ``paged_gather_context`` + absolute-position masking exactly like
+    a chunked-prefill chunk."""
+    tab = jnp.asarray(tab_row, jnp.int32)
+    return paged_verify_write_ref(pool_k, pool_v, k, v, tab, offset)
 
 
 def paged_gather_context(pool_k, pool_v, tab_row):

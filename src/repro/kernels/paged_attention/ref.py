@@ -26,6 +26,34 @@ def paged_attention_ref(q, pool_k, pool_v, block_tab, lengths, softcap: float = 
     return decode_attention_ref(q, k, v, lengths, softcap=softcap)
 
 
+def paged_verify_write_ref(pool_k, pool_v, k, v, tab_row, offset):
+    """Scatter a short verify stripe (1, S, KV, hd) through a block-table row
+    at an ARBITRARY token offset: token t lands at absolute position
+    offset + t, i.e. (tab_row[(offset + t) // ps], (offset + t) % ps).
+
+    Unlike the prefill write's page-shift trick (page-multiple offsets
+    only), the page index is computed per token — S is tiny (k+1 spec
+    tokens), so a plain ``.at[].set`` scatter is the whole kernel. Positions
+    whose page index runs past the table width land on the reserved null
+    page 0 (same absorption contract as bucket padding)."""
+    ps = pool_k.shape[2]
+    KV = pool_k.shape[1]
+    S = k.shape[1]
+    P = tab_row.shape[0]
+    t = jnp.asarray(offset, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    page_idx = t // ps
+    pages = jnp.where(page_idx < P, tab_row[jnp.clip(page_idx, 0, P - 1)], 0)
+    offs = t % ps
+    kvh = jnp.arange(KV)
+    new_k = pool_k.at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        k[0].astype(pool_k.dtype)
+    )
+    new_v = pool_v.at[pages[:, None], kvh[None, :], offs[:, None]].set(
+        v[0].astype(pool_v.dtype)
+    )
+    return new_k, new_v
+
+
 def paged_prefill_write_ref(pool_k, pool_v, k, v, tab_row):
     """Scatter one prefilled prompt's K/V through its block-table row.
 

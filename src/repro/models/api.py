@@ -23,7 +23,7 @@ from repro.models import attention as attn_mod
 from repro.models import transformer as tf
 from repro.models import whisper as wh
 from repro.models.common import ModelConfig, init_tree, shape_tree
-from repro.models.loss import lm_loss, next_tokens
+from repro.models.loss import lm_loss, next_tokens, next_tokens_all
 from repro.models.rotary import mrope_positions_for, positions_for
 
 
@@ -197,6 +197,60 @@ class DecoderLM:
             chunk_state=chunk_state,
         )
         return next_tokens(self.cfg, ctx, params, _last_valid(h, n_valid)), cache, chunk_state
+
+    def verify(self, ctx, params, batch: Mapping, cache):
+        """Dense speculative-decode verify of ONE slot's stripe (B=1).
+
+        batch: tokens (1, S) — the slot's pending last token followed by k
+        proposal tokens; offset scalar int32 — tokens already in cache (the
+        stripe write-head). All S tokens' K/V are written at ``offset`` (a
+        verify step IS a chunk — same stripe write + absolute-position
+        masking as ``prefill_chunk``, reusing its cache index; offsets need
+        not be aligned, dense stripes accept any position) and the greedy
+        next token is emitted at EVERY position: (tokens (1, S), cache).
+        Token j of the output is the model's continuation after verify
+        position j — the engine accepts the longest run where proposal
+        tokens match and rolls the write-head back past the rest (stale
+        positions are masked by length and overwritten by the next write).
+        Attention-only decoders only (no recurrent carry rides this pass);
+        the engine enforces that at construction."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        assert B == 1, "verify runs ONE slot's stripe; B must be 1"
+        offset = jnp.asarray(batch["offset"], jnp.int32)
+        pos = self._positions(B, S, offset)
+        cidx = attn_mod.ChunkPrefillIndex(offset=offset)
+        h, cache, _ = tf.forward(
+            self.cfg, ctx, params, tokens=tokens, positions=pos,
+            mode="prefill", cache=cache, cache_index=cidx,
+        )
+        return next_tokens_all(self.cfg, ctx, params, h), cache
+
+    def verify_paged(self, ctx, params, batch: Mapping, cache):
+        """Paged speculative-decode verify of ONE sequence (B=1).
+
+        Like ``verify`` but against the shared page pool: batch additionally
+        carries tab_row (P,) — the sequence's full block-table row. The S
+        verify tokens scatter through the row at an ARBITRARY (mid-page)
+        offset — ``PagedVerifyIndex`` / ``paged_verify_write``, the
+        per-token-indexed sibling of ``prefill_chunk_paged``'s page-shifted
+        scatter — and queries attend over the gathered context view masked
+        by absolute position. Returns (tokens (1, S), cache); rejected
+        speculative positions stay in the pool as garbage until the engine
+        rolls its write-head (and speculative tail pages) back."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        assert B == 1, "verify_paged scatters through ONE block-table row; B must be 1"
+        offset = jnp.asarray(batch["offset"], jnp.int32)
+        pos = self._positions(B, S, offset)
+        cidx = attn_mod.PagedVerifyIndex(
+            tab_row=jnp.asarray(batch["tab_row"], jnp.int32), offset=offset
+        )
+        h, cache, _ = tf.forward(
+            self.cfg, ctx, params, tokens=tokens, positions=pos,
+            mode="prefill", cache=cache, cache_index=cidx,
+        )
+        return next_tokens_all(self.cfg, ctx, params, h), cache
 
     def install_chunk_state(self, cache, chunk_state, slot):
         """Write a completed chunked prefill's recurrent carry into the

@@ -130,6 +130,25 @@ class PagedChunkPrefillIndex(NamedTuple):
     offset: jax.Array
 
 
+class PagedVerifyIndex(NamedTuple):
+    """Speculative-decode verify pass over one paged sequence.
+
+    tab_row: (P,) int32 — the sequence's full block-table row.
+    offset: scalar int32 — tokens already in cache; verify token t (the
+    pending last token plus k proposal tokens) scatters to absolute position
+    offset + t through the row at an ARBITRARY offset (per-token page
+    indexing — unlike chunk offsets, verify starts mid-page), and the
+    queries attend over the dense gathered context view masked by absolute
+    position, exactly like a chunked-prefill chunk. Rejected speculative
+    positions (> the accepted run) stay in the pool as stale garbage — the
+    engine rolls its write-head back and absolute-position masks plus
+    overwrite-on-next-write keep them invisible.
+    """
+
+    tab_row: jax.Array
+    offset: jax.Array
+
+
 def paged_kv_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int, n_heads: int = 0) -> dict:
     """ShapeDtypeStructs for one attention layer's shared page pool."""
     H = n_heads or cfg.n_heads
@@ -446,6 +465,22 @@ def self_attention(
         assert cache is not None
         new_cache = paged_write_prompt(
             cfg, cache, k, v, cache_index.tab_row, offset=cache_index.offset
+        )
+        ck, cv = pa_ops.paged_gather_context(
+            new_cache["k"], new_cache["v"], cache_index.tab_row
+        )
+        o = context_attention(cfg, q, ck.astype(x.dtype), cv.astype(x.dtype), pos_t)
+    elif mode == "prefill" and isinstance(cache_index, PagedVerifyIndex):
+        # speculative verify: scatter the k+1 verify tokens' K/V at an
+        # arbitrary (mid-page) offset, then attend over the gathered context
+        # view — same absolute-position masking as a prefill chunk, so every
+        # verify position sees exactly the prefix + its own causal slice.
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        assert cache is not None
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = pa_ops.paged_verify_write(
+            cache["k"], cache["v"], k, v, cache_index.tab_row, cache_index.offset
         )
         ck, cv = pa_ops.paged_gather_context(
             new_cache["k"], new_cache["v"], cache_index.tab_row

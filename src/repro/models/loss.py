@@ -79,6 +79,23 @@ def lm_loss(
     return loss + zloss, {"ce": loss, "z": zloss, "tokens": denom}
 
 
+def next_tokens_all(cfg: ModelConfig, ctx, params: Mapping, hidden: jax.Array) -> jax.Array:
+    """Greedy next-token ids at EVERY position: (B, S, d) -> (B, S) int32.
+
+    The speculative-decode verify pass needs the greedy continuation after
+    each verified position in one shot. Argmax is monotone under the tanh
+    softcap, so (matching ``next_tokens``) the cap is skipped — ids are
+    identical either way and the (B, S, V) logits slice stays transient."""
+    w = unembed_weight(cfg, params)
+    logits = qeinsum("bsd,dv->bsv", hidden, w).astype(jnp.float32)
+    if ctx is not None:
+        vocab_ax = ctx.tp_axis if logits.shape[-1] % ctx.tp_size == 0 else None
+        logits = jax.lax.with_sharding_constraint(
+            logits, jax.sharding.NamedSharding(ctx.mesh, P(None, None, vocab_ax))
+        )
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
 def next_tokens(cfg: ModelConfig, ctx, params: Mapping, hidden_last: jax.Array) -> jax.Array:
     """Greedy next-token ids from final hidden states (B, 1|S, d) -> (B,).
 

@@ -160,6 +160,10 @@ class EngineConfig:
                                 # to a bucket_unit multiple; must divide max_len)
     step_token_budget: int = 0  # per-step prefill+decode token budget
                                 # (0 = auto: 2*chunk_tokens chunked, max_len not)
+    spec_tokens: int = 0        # >0: n-gram speculative decoding, proposal
+                                # tokens per slot per step (attention-only
+                                # decoders; greedy-token-identical)
+    spec_ngram: int = 3         # prompt-lookup match length for the proposer
 
 
 @dataclass
@@ -421,6 +425,7 @@ class _EngineBase:
         self._last[slot] = tok
         seq.out.append(tok)
         seq.token_times.append(time.monotonic())  # the prefill-emitted token
+        self.tokens_emitted += 1
         if self._stop_hit(seq, tok, int(self.slot_len[slot])):
             # the prefill-emitted token can already cross a stop condition
             seq.done = True
@@ -481,6 +486,102 @@ class _EngineBase:
             or cache_len >= self._len_cap - 1
         )
 
+    # -- speculative decoding (n-gram / prompt-lookup proposer) -----------------
+    def _resolve_spec(self, cfg, spec_tokens: int) -> int:
+        """Validate the speculative-decoding config. The verify pass re-runs
+        k+1 positions statelessly against the KV cache — recurrent mixers
+        carry per-slot state a rolled-back verify cannot restore, so (like
+        the prefix cache) speculation is attention-only."""
+        if not spec_tokens:
+            return 0
+        if getattr(cfg, "encoder", None) is not None or any(
+            kind != "attn" for kind in cfg.block_pattern
+        ):
+            raise ValueError(
+                "spec_tokens requires an attention-only decoder: the verify "
+                "pass replays positions statelessly, which recurrent mixers "
+                "(mamba/xlstm) and enc-dec models cannot"
+            )
+        return spec_tokens
+
+    def _init_spec(self) -> None:
+        """Speculation + throughput accounting, read lock-free by
+        ``capacity_now()`` and drained per step by ``EngineLoop``:
+        ``tokens_emitted`` counts EVERY emitted token (prefill-emitted,
+        decoded, speculative) so tokens-per-step is a pure delta;
+        ``spec_runs`` holds this step's accepted-run lengths (proposal
+        tokens accepted per verify, cleared at step start); the cumulative
+        ``spec_proposed`` / ``spec_accepted`` give the lifetime acceptance
+        rate."""
+        self.tokens_emitted = 0
+        self.spec_runs: List[int] = []
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+
+    def _propose(self, seq: Sequence) -> Optional[List[int]]:
+        """Prompt-lookup proposal for one decoding slot: match the context's
+        last ``spec_ngram`` tokens against their most recent earlier
+        occurrence and propose the continuation, padded to ``spec_tokens``
+        with 0s (padding is safe — acceptance only ever keeps tokens that
+        EQUAL the model's greedy choice, wherever the proposal came from).
+        Deterministic in the context alone, so a preempted-and-resumed
+        sequence re-proposes identically. Returns None when no match — the
+        slot degrades to plain batched decode this step."""
+        k, n = self._spec_tokens, self._spec_ngram
+        ctx = seq.context_tokens()
+        L = len(ctx)
+        if L < n + 1:
+            return None
+        tail = ctx[-n:]
+        for i in range(L - n - 1, -1, -1):
+            if ctx[i : i + n] == tail:
+                cont = ctx[i + n : i + n + k]
+                return cont + [0] * (k - len(cont))
+        return None
+
+    def _accept_verified(self, slot: int, seq: Sequence, proposal: List[int],
+                         toks, k_eff: int):
+        """Accept the longest matching run of a verify pass and advance the
+        slot's write-head. ``toks[j]`` is the model's greedy token after
+        verify position offset+j (position 0 re-ran the pending last token,
+        1..k_eff the proposal) — token j+1 is trustworthy iff every proposal
+        token before it matched the greedy chain, so we emit tokens until
+        the first mismatch, always at least one (the plain-decode token) and
+        at most k_eff+1 (all proposals plus the free bonus token). The final
+        emitted token becomes the slot's new pending ``_last`` — NOT yet in
+        cache, exactly the batched-decode convention — which is what makes
+        the cache provably valid: positions L..L+m-1 hold the previous
+        pending token plus accepted proposals, all equal to the greedy
+        stream. Stop conditions apply per accepted token (EOS mid-run ends
+        the run). Returns (m, done): tokens emitted, stop hit."""
+        L0 = int(self.slot_len[slot])
+        m = 0
+        done = False
+        tok_t = time.monotonic()          # one stamp per verify pass
+        while True:
+            tok = int(toks[m])
+            m += 1
+            seq.out.append(tok)
+            seq.token_times.append(tok_t)
+            self._last[slot] = tok
+            self.tokens_emitted += 1
+            if self._stop_hit(seq, tok, L0 + m):
+                done = True
+                break
+            if m > k_eff or proposal[m - 1] != tok:
+                break
+        self.slot_len[slot] = L0 + m
+        accepted = m - 1
+        self.spec_proposed += k_eff
+        self.spec_accepted += accepted
+        self.spec_runs.append(accepted)
+        if seq.trace is not None:
+            seq.trace.event(
+                "spec_accept" if accepted else "spec_reject", lane=seq.lane,
+                slot=slot, proposed=k_eff, accepted=accepted,
+            )
+        return m, done
+
     def generate(self, prompts: List[List[int]], max_steps: int = 10000) -> List[Sequence]:
         """Synchronous convenience AND the serialized benchmark baseline:
         runs until all prompts finish while holding the engine lock
@@ -511,6 +612,9 @@ class InferenceEngine(_EngineBase):
         self._chunk_tokens = self._resolve_chunking(
             cfg, ecfg.chunk_tokens, ecfg.bucket_unit, ecfg.max_len, require_divisible=True
         )
+        self._spec_tokens = self._resolve_spec(cfg, ecfg.spec_tokens)
+        self._spec_ngram = max(1, ecfg.spec_ngram)
+        self._init_spec()
         self._step_budget = ecfg.step_token_budget
         self._prefill_shapes = set()
         self._compile_ema_s: Optional[float] = None
@@ -575,9 +679,31 @@ class InferenceEngine(_EngineBase):
 
             return nxt[0], jax.tree.map(write, cache, mini), carry
 
+        def verify_slot(params, cache, tokens, slot, offset):
+            """Speculative verify against the slot's stripe: slice the mini
+            cache out, write all k+1 verify tokens at ``offset`` and read
+            the greedy token at EVERY position in one pass (a verify step is
+            a chunk — same stripe write + absolute-position masking as
+            ``prefill_chunk_slot``, no recurrent carry). Compiles once per
+            k_eff (at most spec_tokens shapes)."""
+            mini = jax.tree.map(
+                lambda full: jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1), cache
+            )
+            toks, mini = model.verify(
+                ctx, params, {"tokens": tokens[None, :], "offset": offset}, mini
+            )
+
+            def write(full, part):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, part.astype(full.dtype), slot, axis=1
+                )
+
+            return toks[0], jax.tree.map(write, cache, mini)
+
         self._prefill = jax.jit(prefill_slot)
         self._decode = jax.jit(decode_all, donate_argnums=(1,))
         self._prefill_chunk = jax.jit(prefill_chunk_slot, donate_argnums=(1, 6))
+        self._verify = jax.jit(verify_slot, donate_argnums=(1,))
         self._install_carry = jax.jit(model.install_chunk_state, donate_argnums=(0,))
         self._last = np.zeros(B, np.int32)
 
@@ -610,6 +736,10 @@ class InferenceEngine(_EngineBase):
             "prefilling_slots": sum(self._chunking),
             "prefill_backlog_tokens": self.prefill_backlog_tokens(),
             "chunk_tokens": self._chunk_tokens,
+            "spec_tokens": self._spec_tokens,
+            "tokens_emitted": self.tokens_emitted,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
         }
 
     def admission_capacity(self, est_tokens: int = 0) -> int:
@@ -682,6 +812,7 @@ class InferenceEngine(_EngineBase):
             self._last[i] = int(nxt)
             seq.out.append(int(nxt))
             seq.token_times.append(time.monotonic())
+            self.tokens_emitted += 1
             if self._stop_hit(seq, int(nxt), int(self.slot_len[i])):
                 # the prefill-emitted token can already cross a stop
                 # condition (max_new_tokens=1, or greedy EOS on prompt)
@@ -690,27 +821,71 @@ class InferenceEngine(_EngineBase):
                 self._release_slot(i)
         return spent
 
+    def _spec_phase(self, active: List[int], spent: int, budget: int):
+        """Speculate on decoding slots at the decode frontier: per slot with
+        a proposal and budget headroom, one verify pass (k_eff+1 positions)
+        replaces this step's plain decode token with the accepted run.
+        Rollback is trivial for the dense engine — the write-head
+        (``slot_len``) simply stops at the accepted length; rejected stripe
+        positions are hidden by the length masks and overwritten by the
+        next write at that position. Returns (speculated slots, spent)."""
+        sped: List[int] = []
+        for slot in active:
+            seq = self.slot_seq[slot]
+            L = int(self.slot_len[slot])
+            k_eff = min(self._spec_tokens, self._len_cap - 1 - L)
+            if k_eff < 1 or spent + k_eff > budget:
+                continue
+            proposal = self._propose(seq)
+            if proposal is None:
+                continue
+            toks, self.cache = self._verify(
+                self.params,
+                self.cache,
+                jnp.asarray(
+                    np.asarray([int(self._last[slot])] + proposal[:k_eff], np.int32)
+                ),
+                jnp.asarray(slot),
+                jnp.asarray(L),
+            )
+            spent += k_eff
+            _, done = self._accept_verified(slot, seq, proposal, np.asarray(toks), k_eff)
+            sped.append(slot)
+            if done:
+                seq.done = True
+                self._just_finished.append(seq)
+                self._release_slot(slot)
+        return sped, spent
+
     def step(self) -> List[Sequence]:
-        """Admit (budget-gated) + chunk work + one decode step; returns
-        sequences finished this step. PREFILLING slots are excluded from the
-        host-side decode bookkeeping — the batched device decode still
-        sweeps them, but its writes land on the chunk cursor (rewritten by
-        the next chunk) and the authoritative recurrent state rides the
-        off-cache carry until install."""
+        """Admit (budget-gated) + chunk work + speculation + one decode
+        step; returns sequences finished this step. PREFILLING slots are
+        excluded from the host-side decode bookkeeping — the batched device
+        decode still sweeps them, but its writes land on the chunk cursor
+        (rewritten by the next chunk) and the authoritative recurrent state
+        rides the off-cache carry until install. Speculated slots are
+        likewise excluded: the sweep's write of their pending token at the
+        new write-head is idempotent with the next step's decode write
+        (same token, same position), so only the host bookkeeping skips
+        them."""
         with self.lock:
             budget = self.step_budget
+            self.spec_runs = []
             spent = sum(
                 1 for i, s in enumerate(self.slot_seq)
                 if s is not None and not self._chunking[i]
             )
             spent = self._admit(spent, budget)
             if self._chunk_tokens:
-                self._run_chunks(spent, budget)
-            finished, self._just_finished = self._just_finished, []
+                spent = self._run_chunks(spent, budget)
             active = [
                 i for i in range(self.ecfg.max_slots)
                 if self.slot_seq[i] is not None and not self._chunking[i]
             ]
+            if self._spec_tokens and active:
+                sped, spent = self._spec_phase(active, spent, budget)
+                active = [i for i in active if i not in set(sped)]
+            finished, self._just_finished = self._just_finished, []
             if active:
                 lens = jnp.asarray(self.slot_len)
                 nxt, self.cache = self._decode(
@@ -724,6 +899,7 @@ class InferenceEngine(_EngineBase):
                     self._last[i] = nxt[i]
                     seq.out.append(int(nxt[i]))
                     seq.token_times.append(tok_t)
+                    self.tokens_emitted += 1
                     if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
                         seq.done = True
                         finished.append(seq)
@@ -755,6 +931,10 @@ class PagedEngineConfig:
                                  # prefixes (attention-only decoders). Off by
                                  # default: release-to-cache retains pages, a
                                  # semantic change callers must opt into.
+    spec_tokens: int = 0         # >0: n-gram speculative decoding, proposal
+                                 # tokens per slot per step (attention-only
+                                 # decoders; greedy-token-identical)
+    spec_ngram: int = 3          # prompt-lookup match length for the proposer
 
     @property
     def table_width(self) -> int:
@@ -809,6 +989,9 @@ class PagedInferenceEngine(_EngineBase):
             cfg, pcfg.chunk_tokens, pcfg.page_size, pcfg.max_seq_len,
             require_divisible=False,   # tail overruns land on the null page
         )
+        self._spec_tokens = self._resolve_spec(cfg, pcfg.spec_tokens)
+        self._spec_ngram = max(1, pcfg.spec_ngram)
+        self._init_spec()
         self._step_budget = pcfg.step_token_budget
         self._prefill_shapes = set()
         self._compile_ema_s: Optional[float] = None
@@ -890,10 +1073,22 @@ class PagedInferenceEngine(_EngineBase):
             nxt, cache, carry = model.prefill_chunk_paged(ctx, params, batch, cache, carry)
             return nxt[0], cache, carry
 
+        def verify_paged(params, cache, tokens, tab_row, offset):
+            """Speculative verify straight against the page pool: the k+1
+            verify tokens scatter through the row at the (mid-page)
+            write-head and the greedy token is read at every position —
+            ``prefill_chunk_paged``'s scatter+gather+absolute-mask shape
+            with per-token page indexing instead of a page-shifted row.
+            Compiles once per k_eff (at most spec_tokens shapes)."""
+            batch = {"tokens": tokens[None, :], "tab_row": tab_row, "offset": offset}
+            toks, cache = model.verify_paged(ctx, params, batch, cache)
+            return toks[0], cache
+
         self._prefill = jax.jit(prefill_paged, donate_argnums=(1,))
         self._decode = jax.jit(decode_all, donate_argnums=(1,))
         self._copy_fork = jax.jit(copy_fork, donate_argnums=(0,))
         self._prefill_chunk = jax.jit(prefill_chunk_paged, donate_argnums=(1, 7))
+        self._verify = jax.jit(verify_paged, donate_argnums=(1,))
         self._install_carry = jax.jit(model.install_chunk_state, donate_argnums=(0,))
         self._last = np.zeros(self.pcfg.max_slots, np.int32)
 
@@ -936,6 +1131,10 @@ class PagedInferenceEngine(_EngineBase):
             "prefilling_slots": sum(self._chunking),
             "prefill_backlog_tokens": self.prefill_backlog_tokens(),
             "chunk_tokens": self._chunk_tokens,
+            "spec_tokens": self._spec_tokens,
+            "tokens_emitted": self.tokens_emitted,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
         }
         pc = self.prefix_cache
         if pc is not None:
@@ -1148,6 +1347,7 @@ class PagedInferenceEngine(_EngineBase):
             admitted = True
             seq.out.append(nxt)
             seq.token_times.append(time.monotonic())
+            self.tokens_emitted += 1
             if self._stop_hit(seq, nxt, int(self.slot_len[slot])):
                 # the (re-)prefill-emitted token can already cross a stop
                 # condition: a resumed sequence near max_new_tokens, or a
@@ -1194,21 +1394,79 @@ class PagedInferenceEngine(_EngineBase):
                 self.tables[slot].append_pages(self.allocator.alloc(1))
                 self.block_tab[slot, :] = self.tables[slot].row(self.pcfg.table_width)
 
+    def _spec_phase(self, active: List[int], spent: int, budget: int):
+        """Speculate on decoding slots at the decode frontier (see the dense
+        engine's ``_spec_phase`` for the budget/acceptance contract). The
+        paged twist is the write-head's page coverage: the verify pass
+        writes positions L..L+k_eff, so the pages covering them are
+        allocated up front — through ``_reserve_pages``, which may evict
+        cold prefix-cache leaves but NEVER preempts a live sequence for
+        speculation (a failed reservation degrades the slot to plain
+        decode). On rejection the speculative tail pages are rolled back:
+        every page past max(pre-speculation count, accepted coverage) was
+        freshly allocated this attempt — exclusively owned, never a
+        prefix-cache or CoW-shared page (those sit at the table's front) —
+        so ``PageTable.trim`` returns them to the free list whole."""
+        ps = self.pcfg.page_size
+        sped: List[int] = []
+        for slot in active:
+            seq = self.slot_seq[slot]
+            L = int(self.slot_len[slot])
+            k_eff = min(self._spec_tokens, self._len_cap - 1 - L)
+            if k_eff < 1 or spent + k_eff > budget:
+                continue
+            proposal = self._propose(seq)
+            if proposal is None:
+                continue
+            table = self.tables[slot]
+            n0 = len(table.pages)
+            need = PageTable.pages_needed(L + k_eff + 1, ps) - n0
+            if need > 0:
+                if not self._reserve_pages(need, seq):
+                    continue               # pool dry: degrade to plain decode
+                table.append_pages(self.allocator.alloc(need))
+                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+            toks, self.cache = self._verify(
+                self.params,
+                self.cache,
+                jnp.asarray(
+                    np.asarray([int(self._last[slot])] + proposal[:k_eff], np.int32)
+                ),
+                jnp.asarray(self.block_tab[slot]),
+                jnp.asarray(L),
+            )
+            spent += k_eff
+            m, done = self._accept_verified(slot, seq, proposal, np.asarray(toks), k_eff)
+            keep = max(n0, PageTable.pages_needed(L + m, ps))
+            if table.trim(keep, self.allocator):
+                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+            table.num_tokens = L + m
+            sped.append(slot)
+            if done:
+                seq.done = True
+                self._just_finished.append(seq)
+                self._release(slot)
+        return sped, spent
+
     def step(self) -> List[Sequence]:
-        """Grow + admit (budget-gated) + chunk work + one decode step;
-        returns sequences finished. Growth runs first so admission can't
-        grab the last pages only for the freshly prefilled sequence to be
-        preempted in the same step — admitted sequences are already
-        growth-covered (ceil((ctx+1)/ps)), PREFILLING ones trivially so
-        (their full-context pages are reserved at admission, and they are
+        """Grow + admit (budget-gated) + chunk work + speculation + one
+        decode step; returns sequences finished. Growth runs first so
+        admission can't grab the last pages only for the freshly prefilled
+        sequence to be preempted in the same step — admitted sequences are
+        already growth-covered (ceil((ctx+1)/ps)), PREFILLING ones trivially
+        so (their full-context pages are reserved at admission, and they are
         preemption candidates like any other occupant). PREFILLING slots
         are excluded from the host-side decode bookkeeping; the batched
         device decode still sweeps them, but its scatter lands on the chunk
         cursor's (allocated) page and is rewritten by the next chunk, and
         the authoritative recurrent state rides the off-cache carry until
-        install."""
+        install. Speculated slots are excluded the same way: the sweep
+        writes their pending token at the new write-head — idempotent with
+        the next step's decode write when that page is allocated, absorbed
+        by the null page when it is not."""
         with self.lock:
             budget = self.step_budget
+            self.spec_runs = []
             occupied = [i for i in range(self.pcfg.max_slots) if self.slot_seq[i] is not None]
             self._ensure_growth(occupied)
             spent = sum(
@@ -1217,13 +1475,16 @@ class PagedInferenceEngine(_EngineBase):
             )
             spent = self._admit(spent, budget)
             if self._chunk_tokens or self.prefix_cache is not None:
-                self._run_chunks(spent, budget)
-            finished, self._just_finished = self._just_finished, []
+                spent = self._run_chunks(spent, budget)
             active = [
                 i for i in range(self.pcfg.max_slots)
                 if self.slot_seq[i] is not None and not self._chunking[i]
             ]
             self.peak_active = max(self.peak_active, len(active))
+            if self._spec_tokens and active:
+                sped, spent = self._spec_phase(active, spent, budget)
+                active = [i for i in active if i not in set(sped)]
+            finished, self._just_finished = self._just_finished, []
             if active:
                 nxt, self.cache = self._decode(
                     self.params,
@@ -1241,6 +1502,7 @@ class PagedInferenceEngine(_EngineBase):
                     self._last[i] = nxt[i]
                     seq.out.append(int(nxt[i]))
                     seq.token_times.append(tok_t)
+                    self.tokens_emitted += 1
                     if self._stop_hit(seq, int(nxt[i]), int(self.slot_len[i])):
                         seq.done = True
                         finished.append(seq)

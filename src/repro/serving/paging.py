@@ -179,6 +179,22 @@ class PageTable:
             raise ValueError(f"sequence needs {len(self.pages)} pages, table width {width}")
         return self.pages + [NULL_PAGE] * (width - len(self.pages))
 
+    def trim(self, keep: int, allocator: BlockAllocator) -> int:
+        """Speculative-decode rollback: drop every page past the first
+        ``keep``, returning how many came back to the free list. The caller
+        guarantees the tail was appended for the current speculation attempt
+        (freshly allocated, ref-count 1, exclusively owned) — prefix-cache
+        and CoW-fork shared pages always sit at the FRONT of the table
+        (matched prefixes are full leading pages; ``fork`` re-allocates the
+        trailing partial page), so a trim that never cuts below the
+        pre-speculation page count can never free a page another holder
+        still reads."""
+        if keep >= len(self.pages):
+            return 0
+        freed = allocator.free(self.pages[keep:])
+        self.pages = self.pages[:keep]
+        return freed
+
     def fork(self, allocator: BlockAllocator) -> "PageTable":
         """Share this table's pages with a new sequence (hedged/retried
         copy). Full pages are shared (ref-count++); the trailing partial

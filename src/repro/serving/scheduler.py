@@ -101,6 +101,13 @@ class EngineLoop:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self.steps = 0          # batched step() iterations executed
+        # deltas for windowed metrics: engine tokens-per-step gauge and the
+        # prefix-cache hit-ratio gauge (cumulative counters stay cumulative;
+        # the gauges report what happened SINCE the last observation so a
+        # long-running engine's gauges never go inert)
+        self._tokens_seen = 0
+        self._pc_queries_seen = 0
+        self._pc_hits_seen = 0
 
     # -- lifecycle -----------------------------------------------------------
     @property
@@ -117,13 +124,21 @@ class EngineLoop:
 
     def stop(self) -> None:
         """Join the step thread; waiters still pending are failed (the loop
-        that would have finished them is gone)."""
+        that would have finished them is gone). Unclaimed completions and
+        abandoned sids are dropped too: their waiters have been failed (or
+        timed out and left), so nothing will ever claim them — a
+        stopped-then-restarted loop (``stop()`` resets ``_thread``, so
+        ``start()`` is allowed again) must begin with a clean registry
+        instead of carrying orphaned results forever."""
         self._stop_flag = True
         self._work.set()
         if self._thread is not None:
             self._thread.join()
             self._thread = None
         self._fail_pending(RuntimeError("engine loop stopped"))
+        with self._lock:
+            self._unclaimed.clear()
+            self._abandoned.clear()
 
     def __enter__(self) -> "EngineLoop":
         if self._thread is None:
@@ -226,10 +241,29 @@ class EngineLoop:
     def step_once(self) -> List[Sequence]:
         """One loop iteration, synchronously (deterministic tests drive this
         instead of ``start()``): admit + batched step + resolve. Returns the
-        sequences finished this step."""
+        sequences finished this step. Per-step speculation observability
+        lands here: the ``engine_tokens_per_step`` gauge (delta of the
+        engine's cumulative token counter — >1 per decoding slot when
+        speculation is accepting) and the ``spec_accepted_run`` histogram
+        (one observation per verify pass, the number of proposal tokens
+        accepted)."""
+        labels = {"engine": self.name}
         finished = self.engine.step()
         self.steps += 1
-        self.registry.counter("engine_loop_steps_total", {"engine": self.name}).inc()
+        self.registry.counter("engine_loop_steps_total", labels).inc()
+        emitted = getattr(self.engine, "tokens_emitted", None)
+        if emitted is not None:
+            self.registry.gauge("engine_tokens_per_step", labels).set(
+                emitted - self._tokens_seen
+            )
+            self._tokens_seen = emitted
+        runs = getattr(self.engine, "spec_runs", None)
+        if runs:
+            hist = self.registry.histogram(
+                "spec_accepted_run", labels, bounds=log_buckets(1.0, 2.0, 8)
+            )
+            for r in runs:
+                hist.observe(float(r))
         if finished:
             self._resolve(finished)
         return finished
@@ -296,7 +330,19 @@ class EngineLoop:
             self.registry.counter(
                 "prefix_cached_tokens_total", labels
             ).inc(seq.cached_tokens)
-            self.registry.gauge("prefix_cache_hit_ratio", labels).set(pc.hit_rate)
+            # the hit-ratio gauge is WINDOWED: hits/queries since the last
+            # observation, not the lifetime-cumulative ``pc.hit_rate`` (which
+            # goes inert on a long-running engine — millions of old queries
+            # drown any behavior change). The cumulative counts stay
+            # available as counters for rate() -style consumers.
+            dq = pc.queries - self._pc_queries_seen
+            dh = pc.hits - self._pc_hits_seen
+            if dq > 0:
+                self.registry.gauge("prefix_cache_hit_ratio", labels).set(dh / dq)
+                self.registry.counter("prefix_cache_queries_total", labels).inc(dq)
+                self.registry.counter("prefix_cache_hits_total", labels).inc(dh)
+                self._pc_queries_seen = pc.queries
+                self._pc_hits_seen = pc.hits
         if seq.trace is not None:
             lane = f"engine-sid{seq.sid}"
             seq.trace.add_tokens(lane, times)
@@ -324,8 +370,11 @@ class EngineLoop:
         a tier is digesting a long prompt. Lock-free, instantaneous — same
         staleness contract as ``engine.capacity_now``."""
         snap = self.engine.capacity_now()
+        # one default for num_slots everywhere, clamped once: a sparse
+        # snapshot (free_slots without num_slots, or the reverse) reports
+        # zero occupancy instead of a negative slot count
         total = max(1, snap.get("num_slots", 1))
-        occupied = snap.get("num_slots", 0) - snap.get("free_slots", 0)
+        occupied = min(total, max(0, total - snap.get("free_slots", total)))
         # PREFILLING slots occupy capacity but are not decoding yet — they
         # are reported via prefilling_slots, not inside the decode batch
         active = max(0, occupied - snap.get("prefilling_slots", 0))

@@ -304,3 +304,57 @@ def test_soak_router_step_loop_conservation_exactly_once(cfg):
         assert all(s is None for s in eng.slot_seq)
         eng.allocator.check_invariants()
         assert eng.allocator.free_pages == eng.pcfg.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle registries (PR 8 satellites): stop() hygiene + snapshot clamping
+# ---------------------------------------------------------------------------
+
+
+def test_stop_clears_unclaimed_and_abandoned_registries(cfg):
+    """Regression: stop() failed pending futures but left ``_unclaimed``
+    results and ``_abandoned`` sids behind, so a stopped-then-restarted
+    loop carried orphaned registry state forever. Both must be cleared —
+    nothing will ever claim them once their waiters are gone."""
+    eng = _paged(cfg, slots=1, new=2)
+    loop = EngineLoop(eng)                         # manual stepping
+    direct = eng.submit(_prompts(cfg, 1)[0])       # no future: loop can't hand it off
+    for _ in range(30):
+        loop.step_once()
+        if all(s is None for s in eng.slot_seq) and not eng.waiting:
+            break
+    assert direct in loop._unclaimed
+    sid = loop.submit(_prompts(cfg, 1, base=7)[0])
+    with pytest.raises(TimeoutError):
+        loop.wait(sid, 0.0)                        # abandons: never stepped again
+    assert sid in loop._abandoned
+    loop.stop()
+    assert not loop._unclaimed and not loop._abandoned and not loop._futures
+    loop.start()                                   # restart begins with a clean registry
+    assert not loop._unclaimed and not loop._abandoned
+    loop.stop()
+
+
+def test_capacity_now_clamps_sparse_engine_snapshots(cfg):
+    """Regression: ``capacity_now`` read ``num_slots`` with a different
+    default at each use, so a sparse snapshot (an engine exporting
+    ``free_slots`` but not ``num_slots``, or neither) produced a negative
+    active-slot count. One default, clamped once: occupancy is always in
+    [0, 1] and ``active_slots`` never negative."""
+
+    class _Stub:
+        def __init__(self, snap):
+            self._snap = snap
+
+        def capacity_now(self):
+            return dict(self._snap)
+
+    for snap in ({}, {"free_slots": 5}, {"num_slots": 4},
+                 {"num_slots": 2, "free_slots": 9},
+                 {"free_slots": 0, "prefilling_slots": 3}):
+        out = EngineLoop(_Stub(snap)).capacity_now()
+        assert out["active_slots"] >= 0, snap
+        assert 0.0 <= out["batch_occupancy"] <= 1.0, snap
+    full = EngineLoop(_Stub({"num_slots": 4, "free_slots": 1,
+                             "prefilling_slots": 1})).capacity_now()
+    assert full["active_slots"] == 2 and full["batch_occupancy"] == 0.5

@@ -102,9 +102,10 @@ def test_page_table_row_pads_with_null_page():
 @given(
     ops=st.lists(
         st.tuples(
-            st.sampled_from(["admit", "preempt", "fork", "grow", "free"]),
+            st.sampled_from(["admit", "preempt", "fork", "grow", "free",
+                             "speculate"]),
             st.integers(0, 15),            # which live table the op targets
-            st.integers(1, 12),            # admit context length (tokens)
+            st.integers(1, 12),            # admit ctx length / spec k+accepted
         ),
         min_size=1,
         max_size=80,
@@ -114,10 +115,12 @@ def test_page_table_row_pads_with_null_page():
 def test_allocator_pagetable_invariants_under_random_interleavings(ops):
     """Drive the orders the concurrent router runtime can produce — admit,
     preempt (release + later re-admit), fork (hedged copy: prefix sharing +
-    CoW), grow, free — against BlockAllocator/PageTable and assert after
-    every step that (a) the allocator's free/used partition is exact, and
-    (b) every page's ref-count equals the number of live tables holding it.
-    Finally releasing everything must return the pool to fully free."""
+    CoW), grow, free, speculate (reserve the verify window's pages up
+    front, accept a shorter run, trim the rejected tail) — against
+    BlockAllocator/PageTable and assert after every step that (a) the
+    allocator's free/used partition is exact, and (b) every page's
+    ref-count equals the number of live tables holding it. Finally
+    releasing everything must return the pool to fully free."""
     PS = 4
     alloc = BlockAllocator(num_pages=13, page_size=PS)
     tables = []                                        # live sequences
@@ -157,6 +160,25 @@ def test_allocator_pagetable_invariants_under_random_interleavings(ops):
             t.num_tokens = min(t.num_tokens + 1, t.capacity_tokens)
         elif op == "free" and tables:
             tables.pop(idx % len(tables)).release(alloc)
+        elif op == "speculate" and tables:
+            # the paged engine's verify window: allocate pages covering
+            # L..L+k up front, accept m <= k+1 tokens, trim back to
+            # max(pre-spec pages, accepted coverage) — the freed tail must
+            # be exactly the speculative overshoot, never a shared page
+            t = tables[idx % len(tables)]
+            L, k = t.num_tokens, 1 + n_tokens % 4
+            n0 = len(t.pages)
+            need = PageTable.pages_needed(L + k + 1, PS) - n0
+            if need > 0:
+                if not alloc.can_alloc(need):
+                    check()
+                    continue
+                t.append_pages(alloc.alloc(need))
+            m = 1 + (idx + n_tokens) % (k + 1)         # accepted run, 1..k+1
+            keep = max(n0, PageTable.pages_needed(L + m, PS))
+            t.trim(keep, alloc)
+            t.num_tokens = L + m
+            assert len(t.pages) >= PageTable.pages_needed(L + m, PS)
         check()
 
     for t in tables:

@@ -386,3 +386,42 @@ def test_prefix_cache_requires_attention_only_decoder():
     for arch in ("jamba-1.5-large-398b", "xlstm-350m"):
         with pytest.raises(ValueError, match="attention-only"):
             _paged(get_config(arch, smoke=True))
+
+
+def test_hit_ratio_gauge_is_windowed_not_lifetime(cfg=None):
+    """Regression (PR 8 satellite): the ``prefix_cache_hit_ratio`` gauge
+    exported the cache's lifetime-cumulative ``hit_rate``, which goes inert
+    on a long-running engine — millions of old queries drown any behavior
+    change. The gauge must report the ratio over the window since its last
+    observation; the cumulative counts stay available as counters."""
+    from repro.serving.engine import Sequence
+    from repro.serving.scheduler import EngineLoop
+
+    class _PC:
+        queries = 0
+        hits = 0
+
+    class _Eng:
+        prefix_cache = _PC()
+
+        def capacity_now(self):
+            return {}
+
+    loop = EngineLoop(_Eng(), name="w", registry=MetricsRegistry())
+    labels = {"engine": "w"}
+    pc = loop.engine.prefix_cache
+    seq = Sequence(sid=0, prompt=[1], out=[2])
+
+    pc.queries, pc.hits = 4, 1                    # first window: 1/4 hit
+    loop._observe_finished(seq)
+    assert loop.registry.gauge("prefix_cache_hit_ratio", labels).value == 0.25
+
+    pc.queries, pc.hits = 8, 5                    # next window: 4 more, ALL hit
+    loop._observe_finished(seq)
+    # lifetime hit_rate would read 5/8; the windowed gauge reads 4/4
+    assert loop.registry.gauge("prefix_cache_hit_ratio", labels).value == 1.0
+    assert loop.registry.counter("prefix_cache_queries_total", labels).value == 8
+    assert loop.registry.counter("prefix_cache_hits_total", labels).value == 5
+
+    loop._observe_finished(seq)                   # empty window: gauge holds
+    assert loop.registry.gauge("prefix_cache_hit_ratio", labels).value == 1.0

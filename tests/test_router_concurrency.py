@@ -386,3 +386,58 @@ def test_soak_engine_backed_tiers(engine_tiers):
         assert all(s is None for s in eng.slot_seq)
         eng.allocator.check_invariants()
         assert eng.allocator.free_pages == eng.pcfg.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Hedge monitor pacing (PR 8 satellite): injected clock + prompt stop
+# ---------------------------------------------------------------------------
+
+
+def test_hedge_scan_fires_deterministically_on_injected_clock():
+    """Regression: the hedge monitor paced staleness checks on a real
+    ``time.sleep`` even when a fake clock was injected, so fake-clock tests
+    had to sleep real wall time and hope the monitor ran. ``_hedge_scan``
+    is one synchronous pass against ``self.clock`` — advance the fake
+    clock, call it, and hedging is exact: fires only past ``hedge_after_s``
+    and exactly once per request."""
+    t = [0.0]
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, lambda req: "f", capacity=1),
+            Tier.DOCKER: Backend(Tier.DOCKER, lambda req: "d", capacity=1),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: "s", capacity=4),
+        },
+        policy=_policy(),
+        hedge_after_s=1.0,
+        clock=lambda: t[0],
+    )
+    req = Request(rid=11, arrival_t=t[0], data_size=100.0, timeout_s=60.0)
+    assert router.submit(req) == Tier.FLASK       # queued: router not started
+    assert router._hedge_scan() == 0              # fresh
+    t[0] = 1.0
+    assert router._hedge_scan() == 0              # exactly at the threshold: not stale
+    t[0] = 1.01
+    assert router._hedge_scan() == 1              # past it: fires
+    assert req.hedged
+    t[0] = 50.0
+    assert router._hedge_scan() == 0              # never re-fires for a hedged request
+
+
+def test_hedge_monitor_stop_wakes_the_sleeping_monitor():
+    """stop() must not wait out a sleeping monitor tick: the loop paces on
+    the stop Event, so setting it wakes the thread immediately and the
+    join in stop() returns with every thread dead."""
+    router = StraightLineRouter(
+        {Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: "s", capacity=4)},
+        policy=_policy(),
+        hedge_after_s=60.0,                       # tick clamps to 50 ms
+    )
+    router.start(workers_per_tier=1)
+    monitor = [th for th in router._threads if th.name == "router-hedge"]
+    assert monitor and monitor[0].is_alive()
+    router.stop()
+    assert router._monitor_stop.is_set()
+    assert not monitor[0].is_alive()
+    router.start(workers_per_tier=1)              # restart re-arms the Event
+    assert not router._monitor_stop.is_set()
+    router.stop()
