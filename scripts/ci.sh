@@ -48,6 +48,14 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/prefix_cache.py --
 # draft/verify path can neither change tokens nor leak speculative pages.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/speculative_decode.py --fast
 
+# Paged-decode + int8 KV smoke: asserts the paged engine serves >= 2x the
+# dense engine's concurrent sequences from the same cache budget, and that
+# an int8-quantized pool (values + per-page-slot scales) admits >= 1.8x the
+# f32 pool's concurrent residents at EQUAL cache bytes — with greedy outputs
+# token-identical in both comparisons, so capacity cannot be bought with
+# silent output drift.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python benchmarks/paged_decode.py --fast
+
 # Observability overhead gate: disabled tracing must be free (identical
 # outputs, ~0 throughput cost) and enabled tracing + MonitorSampler bounded —
 # instrumentation cannot silently become a tax on the serving hot path.

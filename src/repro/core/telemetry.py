@@ -110,6 +110,26 @@ def prefix_hit_rate(stats: Optional[dict]) -> Optional[float]:
     return None if r is None else min(1.0, max(0.0, float(r)))
 
 
+def kv_bytes_per_token(stats: Optional[dict]) -> Optional[float]:
+    """KV-cache bytes per cached token from a ``capacity_now()``-style
+    snapshot (values + scales for int8 pools) — lets the placer convert an
+    engine's free-token headroom into bytes regardless of storage format.
+    None when the snapshot is missing or the engine predates the export."""
+    if not stats:
+        return None
+    b = stats.get("kv_bytes_per_token")
+    return None if b is None else float(b)
+
+
+def kv_cache_dtype(stats: Optional[dict]) -> Optional[str]:
+    """The engine's KV-cache storage dtype name ("int8", "bfloat16", ...),
+    or None when the snapshot is missing or the key is absent."""
+    if not stats:
+        return None
+    d = stats.get("kv_cache_dtype")
+    return None if d is None else str(d)
+
+
 def spec_acceptance(stats: Optional[dict]) -> Optional[float]:
     """Speculative-decode acceptance rate — accepted draft tokens over
     proposed draft tokens — from a ``capacity_now()``-style snapshot. None
@@ -253,6 +273,14 @@ class CapacityGauge:
         """Speculative-decode acceptance rate for ``name``, or None when
         speculation is off or nothing has been proposed yet."""
         return spec_acceptance(self.stats(name))
+
+    def kv_bytes_per_token(self, name: str) -> Optional[float]:
+        """KV-cache bytes per cached token for ``name``, or None."""
+        return kv_bytes_per_token(self.stats(name))
+
+    def kv_cache_dtype(self, name: str) -> Optional[str]:
+        """KV-cache storage dtype name for ``name``, or None."""
+        return kv_cache_dtype(self.stats(name))
 
     def snapshot(self) -> Dict[str, int]:
         return {name: max(0, int(p())) for name, p in self._probes.items()}
@@ -643,6 +671,11 @@ class MonitorSampler:
                 "warmth": warm_fraction(stats),
                 "cached_pages": cached_pages(stats),
                 "prefix_hit_rate": prefix_hit_rate(stats),
+                # storage format rides along so a dashboard can annotate the
+                # byte-capacity series; the dtype STRING stays out of the
+                # numeric registry loop below
+                "kv_bytes_per_token": kv_bytes_per_token(stats),
+                "kv_cache_dtype": kv_cache_dtype(stats),
             }
             with self._lock:
                 ring = self._series.get(tier)
@@ -655,7 +688,7 @@ class MonitorSampler:
                 labels = {"tier": tier}
                 for key in ("occupancy", "queue_depth", "prefill_backlog", "warmth",
                             "free_pages", "free_slots", "cached_pages",
-                            "prefix_hit_rate"):
+                            "prefix_hit_rate", "kv_bytes_per_token"):
                     v = sample[key]
                     if v is not None:
                         self.registry.gauge(f"tier_{key}", labels).set(float(v))

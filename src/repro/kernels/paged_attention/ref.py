@@ -1,11 +1,30 @@
 """Pure-jnp oracles for the paged KV-pool kernels: decode gather-attention
-(gather then dense) and the prefill write scatter (`.at[].set` through the
-block-table row)."""
+(gather then dense), the prefill write scatter (`.at[].set` through the
+block-table row), the int8-pool legs (quantize-at-write / dequantize-on-
+gather, sharing ``models/quant.py``'s KV quant idiom so kernel-vs-ref parity
+is exact on the int8 tensors), and the chained-table flattener (two-level
+block tables reduce to a flat physical row for every oracle)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.models.quant import dequantize_kv, quantize_kv
+
+
+def chain_rows(l1_tab: jnp.ndarray, l2_tab: jnp.ndarray) -> jnp.ndarray:
+    """Flatten two-level block tables to the flat physical row they encode.
+
+    l1_tab: (B, W1) int32 — per-sequence row of *table-page* ids; l2_tab:
+    (n_rows, tpp) int32 — pool of second-level rows holding physical page
+    ids. Logical block i of sequence b lives in physical page
+    ``l2_tab[l1_tab[b, i // tpp], i % tpp]``; row 0 of l2_tab is the
+    reserved all-null table page, so unused l1 entries resolve to the null
+    data page. Returns (B, W1 * tpp) int32.
+    """
+    B, W1 = l1_tab.shape
+    tpp = l2_tab.shape[1]
+    return l2_tab[l1_tab].reshape(B, W1 * tpp)
 
 
 def gather_kv(pool: jnp.ndarray, block_tab: jnp.ndarray) -> jnp.ndarray:
@@ -19,10 +38,21 @@ def gather_kv(pool: jnp.ndarray, block_tab: jnp.ndarray) -> jnp.ndarray:
     return g.transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
 
 
-def paged_attention_ref(q, pool_k, pool_v, block_tab, lengths, softcap: float = 0.0):
-    """q: (B, KV, G, hd); pools: (num_pages, KV, ps, hd); lengths: (B,)."""
-    k = gather_kv(pool_k, block_tab)
-    v = gather_kv(pool_v, block_tab)
+def paged_attention_ref(q, pool_k, pool_v, block_tab, lengths, softcap: float = 0.0,
+                        pool_ks=None, pool_vs=None, l2_tab=None):
+    """q: (B, KV, G, hd); pools: (num_pages, KV, ps, hd); lengths: (B,).
+
+    With ``pool_ks``/``pool_vs`` (int8 pool + per-(page-slot, head) scale
+    pools) the gathered K/V is dequantized before the dense oracle — the
+    dequant-on-gather contract the Pallas kernel implements in VMEM. With
+    ``l2_tab``, ``block_tab`` is the first-level table of page-of-pages and
+    is flattened through ``chain_rows`` first."""
+    tab = chain_rows(block_tab, l2_tab) if l2_tab is not None else block_tab
+    k = gather_kv(pool_k, tab)
+    v = gather_kv(pool_v, tab)
+    if pool_ks is not None:
+        k = dequantize_kv(k, gather_kv(pool_ks, tab), jnp.float32)
+        v = dequantize_kv(v, gather_kv(pool_vs, tab), jnp.float32)
     return decode_attention_ref(q, k, v, lengths, softcap=softcap)
 
 
@@ -54,6 +84,17 @@ def paged_verify_write_ref(pool_k, pool_v, k, v, tab_row, offset):
     return new_k, new_v
 
 
+def paged_verify_write_quant_ref(pool_k, pool_v, pool_ks, pool_vs, k, v, tab_row, offset):
+    """Int8 leg of the verify-stripe scatter: quantize the incoming stripe
+    per (token, head), then land values and scales through the same
+    per-token page indexing. Returns the four updated pools."""
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    new_k, new_v = paged_verify_write_ref(pool_k, pool_v, kq, vq, tab_row, offset)
+    new_ks, new_vs = paged_verify_write_ref(pool_ks, pool_vs, ks, vs, tab_row, offset)
+    return new_k, new_v, new_ks, new_vs
+
+
 def paged_prefill_write_ref(pool_k, pool_v, k, v, tab_row):
     """Scatter one prefilled prompt's K/V through its block-table row.
 
@@ -76,3 +117,15 @@ def paged_prefill_write_ref(pool_k, pool_v, k, v, tab_row):
         v[0].astype(pool_v.dtype)
     )
     return new_k, new_v
+
+
+def paged_prefill_write_quant_ref(pool_k, pool_v, pool_ks, pool_vs, k, v, tab_row):
+    """Int8 leg of the prefill scatter: quantize-at-write (per token, head —
+    ``models/quant.py``'s KV idiom), then scatter values and scales through
+    the same block-table row. The Pallas twin fuses the quantization into
+    the write kernel's VMEM pass; this oracle keeps it bit-identical."""
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    new_k, new_v = paged_prefill_write_ref(pool_k, pool_v, kq, vq, tab_row)
+    new_ks, new_vs = paged_prefill_write_ref(pool_ks, pool_vs, ks, vs, tab_row)
+    return new_k, new_v, new_ks, new_vs

@@ -273,9 +273,15 @@ class DecoderLM:
         B, S = tok.shape
         if "block_tab" in batch:
             # paged path: cache is a page pool, "block_tab" (B, P) maps each
-            # slot's logical blocks to physical pages (serving/paging.py).
+            # slot's logical blocks to physical pages (serving/paging.py);
+            # with "l2_tab" it is instead the first level of a chained table.
             lens = jnp.asarray(batch["lengths"], jnp.int32)
-            pidx = attn_mod.PagedIndex(lens, jnp.asarray(batch["block_tab"], jnp.int32))
+            l2 = batch.get("l2_tab")
+            pidx = attn_mod.PagedIndex(
+                lens,
+                jnp.asarray(batch["block_tab"], jnp.int32),
+                None if l2 is None else jnp.asarray(l2, jnp.int32),
+            )
             pos = lens[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
             if self.cfg.pos == "mrope":
                 pos = jnp.broadcast_to(pos[None], (3, B, S))

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import EMBED, NULL, TP, ModelConfig, ParamDef
-from repro.models.quant import qeinsum
+from repro.models.quant import dequantize_kv, qeinsum, quantize_kv
 from repro.models.rotary import apply_mrope, apply_rope
 
 NEG_INF = -1e30
@@ -58,8 +58,8 @@ def kv_cache_defs(
             "v_scale": jax.ShapeDtypeStruct((batch, cap, KV, 1), jnp.bfloat16),
         }
     return {
-        "k": jax.ShapeDtypeStruct((batch, cap, KV, hd), cfg.compute_dtype),
-        "v": jax.ShapeDtypeStruct((batch, cap, KV, hd), cfg.compute_dtype),
+        "k": jax.ShapeDtypeStruct((batch, cap, KV, hd), cfg.kv_dtype),
+        "v": jax.ShapeDtypeStruct((batch, cap, KV, hd), cfg.kv_dtype),
     }
 
 
@@ -78,11 +78,15 @@ class PagedIndex(NamedTuple):
 
     lengths: (B,) int32 — tokens already in cache per slot (write position).
     block_tab: (B, P) int32 — physical page per logical block; unused
-    entries point at the reserved null page 0.
+    entries point at the reserved null page 0. With ``l2`` set (chained
+    two-level tables), block_tab is instead the (B, W1) first-level row of
+    *table-page* ids and l2 is the (n_rows, tpp) pool of second-level rows:
+    logical block i resolves to ``l2[block_tab[b, i // tpp], i % tpp]``.
     """
 
     lengths: jax.Array
     block_tab: jax.Array
+    l2: Optional[jax.Array] = None
 
 
 class PagedPrefillIndex(NamedTuple):
@@ -150,34 +154,59 @@ class PagedVerifyIndex(NamedTuple):
 
 
 def paged_kv_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int, n_heads: int = 0) -> dict:
-    """ShapeDtypeStructs for one attention layer's shared page pool."""
+    """ShapeDtypeStructs for one attention layer's shared page pool.
+
+    With ``cfg.kv_quant`` the pool stores int8 values plus per-(page-slot,
+    head) bf16 scales — ``models/quant.py``'s KV idiom with the token axis
+    living inside the page. Every access path dispatches on the presence of
+    the ``k_scale`` leaf."""
     H = n_heads or cfg.n_heads
     KV = min(cfg.n_kv_heads, H)
-    if cfg.kv_quant:
-        raise NotImplementedError("paged KV cache does not support int8 KV yet")
     shape = (num_pages, KV, page_size, cfg.hd)
+    if cfg.kv_quant:
+        sshape = (num_pages, KV, page_size, 1)
+        return {
+            "k": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct(sshape, jnp.bfloat16),
+            "v_scale": jax.ShapeDtypeStruct(sshape, jnp.bfloat16),
+        }
     return {
-        "k": jax.ShapeDtypeStruct(shape, cfg.compute_dtype),
-        "v": jax.ShapeDtypeStruct(shape, cfg.compute_dtype),
+        "k": jax.ShapeDtypeStruct(shape, cfg.kv_dtype),
+        "v": jax.ShapeDtypeStruct(shape, cfg.kv_dtype),
     }
 
 
 def paged_cache_kv(cfg: ModelConfig, cache: Mapping, k: jax.Array, v: jax.Array, idx: PagedIndex) -> dict:
     """Scatter one new token's K/V (B, 1, KV, hd) into the page pool at each
     slot's (page, offset). Dead slots (length 0, null block table) scatter
-    into the reserved null page — harmless by construction."""
+    into the reserved null page — harmless by construction. With chained
+    tables (``idx.l2``) the logical page index resolves through the
+    second-level pool; with a quantized pool the token is quantized here and
+    its scales land in the scale pools through the same indices."""
     ps = cache["k"].shape[2]
     KV = cache["k"].shape[1]
-    pages = jnp.take_along_axis(idx.block_tab, (idx.lengths // ps)[:, None], axis=1)[:, 0]
+    lp = idx.lengths // ps                                   # logical page index
+    if idx.l2 is not None:
+        tpp = idx.l2.shape[1]
+        l1e = jnp.take_along_axis(idx.block_tab, (lp // tpp)[:, None], axis=1)[:, 0]
+        pages = idx.l2[l1e, lp % tpp]
+    else:
+        pages = jnp.take_along_axis(idx.block_tab, lp[:, None], axis=1)[:, 0]
     offs = idx.lengths % ps
     kvh = jnp.arange(KV)
+    at = (pages[:, None], kvh[None, :], offs[:, None])
     out = dict(cache)
-    out["k"] = cache["k"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
-        k[:, 0].astype(cache["k"].dtype)
-    )
-    out["v"] = cache["v"].at[pages[:, None], kvh[None, :], offs[:, None]].set(
-        v[:, 0].astype(cache["v"].dtype)
-    )
+    if "k_scale" in cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        out["k"] = cache["k"].at[at].set(kq[:, 0])
+        out["v"] = cache["v"].at[at].set(vq[:, 0])
+        out["k_scale"] = cache["k_scale"].at[at].set(ks[:, 0].astype(cache["k_scale"].dtype))
+        out["v_scale"] = cache["v_scale"].at[at].set(vs[:, 0].astype(cache["v_scale"].dtype))
+    else:
+        out["k"] = cache["k"].at[at].set(k[:, 0].astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[at].set(v[:, 0].astype(cache["v"].dtype))
     return out
 
 
@@ -195,27 +224,23 @@ def paged_write_prompt(
     from repro.kernels.paged_attention import ops as pa_ops
 
     out = dict(cache)
-    out["k"], out["v"] = pa_ops.paged_prefill_write(
-        cache["k"], cache["v"], k, v, tab_row, use_pallas=cfg.use_pallas, offset=offset
-    )
+    if "k_scale" in cache:
+        out["k"], out["v"], out["k_scale"], out["v_scale"] = pa_ops.paged_prefill_write_quant(
+            cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+            k, v, tab_row, use_pallas=cfg.use_pallas, offset=offset,
+        )
+    else:
+        out["k"], out["v"] = pa_ops.paged_prefill_write(
+            cache["k"], cache["v"], k, v, tab_row, use_pallas=cfg.use_pallas, offset=offset
+        )
     return out
 
 
 # ---------------------------------------------------------------------------
-# int8 KV quantization
+# int8 KV quantization — the shared idiom lives in models/quant.py (the paged
+# pool's write kernels and jnp oracles import it from there too, which is
+# what keeps every storage path bit-identical on the int8 tensors).
 # ---------------------------------------------------------------------------
-
-
-def quantize_kv(x: jax.Array):
-    """Per (token, head) absmax int8. x: (B, T, KV, hd)."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
-
-
-def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
-    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
 
 
 def _dus(buf: jax.Array, upd: jax.Array, index) -> jax.Array:
@@ -467,7 +492,8 @@ def self_attention(
             cfg, cache, k, v, cache_index.tab_row, offset=cache_index.offset
         )
         ck, cv = pa_ops.paged_gather_context(
-            new_cache["k"], new_cache["v"], cache_index.tab_row
+            new_cache["k"], new_cache["v"], cache_index.tab_row,
+            pool_ks=new_cache.get("k_scale"), pool_vs=new_cache.get("v_scale"),
         )
         o = context_attention(cfg, q, ck.astype(x.dtype), cv.astype(x.dtype), pos_t)
     elif mode == "prefill" and isinstance(cache_index, PagedVerifyIndex):
@@ -479,11 +505,21 @@ def self_attention(
 
         assert cache is not None
         new_cache = dict(cache)
-        new_cache["k"], new_cache["v"] = pa_ops.paged_verify_write(
-            cache["k"], cache["v"], k, v, cache_index.tab_row, cache_index.offset
-        )
+        if "k_scale" in cache:
+            (
+                new_cache["k"], new_cache["v"],
+                new_cache["k_scale"], new_cache["v_scale"],
+            ) = pa_ops.paged_verify_write_quant(
+                cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+                k, v, cache_index.tab_row, cache_index.offset,
+            )
+        else:
+            new_cache["k"], new_cache["v"] = pa_ops.paged_verify_write(
+                cache["k"], cache["v"], k, v, cache_index.tab_row, cache_index.offset
+            )
         ck, cv = pa_ops.paged_gather_context(
-            new_cache["k"], new_cache["v"], cache_index.tab_row
+            new_cache["k"], new_cache["v"], cache_index.tab_row,
+            pool_ks=new_cache.get("k_scale"), pool_vs=new_cache.get("v_scale"),
         )
         o = context_attention(cfg, q, ck.astype(x.dtype), cv.astype(x.dtype), pos_t)
     elif mode == "prefill" and isinstance(cache_index, ChunkPrefillIndex):
@@ -507,6 +543,9 @@ def self_attention(
             cache_index.block_tab, cache_index.lengths + 1,
             use_pallas=cfg.use_pallas,
             softcap=cfg.logit_softcap,
+            pool_ks=new_cache.get("k_scale"),
+            pool_vs=new_cache.get("v_scale"),
+            l2_tab=cache_index.l2,
         )
     elif mode == "decode":
         assert cache is not None and cache_index is not None

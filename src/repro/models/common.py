@@ -90,6 +90,8 @@ class ModelConfig:
     attn_chunk: int = 1024      # query-chunk size for chunked causal attention
     ce_chunks: int = 8          # sequence chunks for vocab-parallel CE
     kv_quant: bool = False      # int8 KV cache
+    kv_cache_dtype: Any = None  # non-quantized KV cache storage dtype
+                                # (None -> compute_dtype; ignored when kv_quant)
     use_pallas: bool = False    # select Pallas kernels (TPU target); jnp ref path on CPU
     logit_softcap: float = 0.0
     # --- perf-variant knobs (EXPERIMENTS.md §Perf) ---
@@ -102,6 +104,11 @@ class ModelConfig:
     @property
     def hd(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def kv_dtype(self):
+        """Storage dtype of non-quantized KV caches/pools."""
+        return self.kv_cache_dtype if self.kv_cache_dtype is not None else self.compute_dtype
 
     @property
     def n_superblocks(self) -> int:

@@ -34,6 +34,29 @@ def is_quant(w: Any) -> bool:
     return isinstance(w, Mapping) and "q" in w and "s" in w
 
 
+# ---------------------------------------------------------------------------
+# KV-cache quantization: the weight idiom extended to activations. One scale
+# per (token, head-group) — the head dim is the reduced axis, so dequant is a
+# rank-1 broadcast and the scale tensor is hd x smaller than the cache.
+# Shared by the dense int8 cache (models/attention.py) and the paged pool
+# legs (kernels/paged_attention), so every storage path quantizes
+# bit-identically and kernel-vs-ref parity is exact on the int8 tensors.
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array):
+    """Per (token, head) absmax int8. x: (..., hd) — typically (B, T, KV, hd).
+    Returns (int8 values, bf16 scales with the trailing axis reduced to 1)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
 def qeinsum(pattern: str, x: jax.Array, w: Union[jax.Array, QuantW]) -> jax.Array:
     """einsum where w may be a quantized dict; output dtype follows x."""
     if not is_quant(w):

@@ -139,6 +139,7 @@ from repro.models import get_model
 from repro.serving.paging import (
     NULL_PAGE,
     BlockAllocator,
+    ChainedTables,
     OutOfPages,
     PageTable,
     bucket_lengths,
@@ -146,6 +147,41 @@ from repro.serving.paging import (
     num_buckets,
 )
 from repro.serving.prefix_cache import PrefixCache
+
+
+def _apply_cache_dtype(cfg, choice: str):
+    """Resolve an engine-level KV-cache storage choice onto the model config:
+    "" inherits the model's own settings, "f32"/"bf16" set the non-quantized
+    storage dtype, "int8" turns on KV quantization (values + per-token-head
+    scales). The engine owns this knob because cache layout is a serving
+    decision — the same checkpoint serves at any storage width."""
+    if not choice:
+        return cfg
+    if choice == "int8":
+        return cfg.replace(kv_quant=True)
+    dt = {"f32": jnp.float32, "bf16": jnp.bfloat16}.get(choice)
+    if dt is None:
+        raise ValueError(f"cache_dtype must be '', 'f32', 'bf16' or 'int8', got {choice!r}")
+    return cfg.replace(kv_quant=False, kv_cache_dtype=dt)
+
+
+def _kv_dtype_name(cfg) -> str:
+    """The KV-cache storage dtype as telemetry sees it."""
+    return "int8" if cfg.kv_quant else jnp.dtype(cfg.kv_dtype).name
+
+
+def _kv_bytes_per_token(cfg, cache, token_slots: int) -> float:
+    """KV-cache bytes per cached-token slot across every attention layer —
+    values plus scales for int8, so the placer converts free tokens to real
+    bytes whatever the storage format. Recurrent-mixer state is per-slot,
+    not per-token, and stays out of the ratio."""
+    total = 0
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind != "attn":
+            continue
+        for leaf in jax.tree.leaves(cache["blocks"][f"l{i}_mixer"]):
+            total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total / max(1, token_slots)
 
 
 @dataclass
@@ -164,6 +200,8 @@ class EngineConfig:
                                 # tokens per slot per step (attention-only
                                 # decoders; greedy-token-identical)
     spec_ngram: int = 3         # prompt-lookup match length for the proposer
+    cache_dtype: str = ""       # KV-cache storage: "" inherit model config,
+                                # "f32" | "bf16" | "int8" (int8 = quantized)
 
 
 @dataclass
@@ -602,6 +640,7 @@ class _EngineBase:
 
 class InferenceEngine(_EngineBase):
     def __init__(self, cfg, ecfg: EngineConfig, ctx=None, params=None, seed: int = 0):
+        cfg = _apply_cache_dtype(cfg, ecfg.cache_dtype)
         self.cfg = cfg
         self.ecfg = ecfg
         self.ctx = ctx
@@ -621,6 +660,7 @@ class InferenceEngine(_EngineBase):
         self.lock = threading.RLock()
         B, L = ecfg.max_slots, ecfg.max_len
         self.cache = self.model.init_cache(B, L)
+        self._kv_bytes_per_token = _kv_bytes_per_token(cfg, self.cache, B * L)
         self.slot_len = np.zeros(B, np.int32)        # tokens in cache per slot
         self.slot_seq: List[Optional[Sequence]] = [None] * B
         self.waiting: Deque[Sequence] = deque()
@@ -729,6 +769,8 @@ class InferenceEngine(_EngineBase):
             "num_slots": self.ecfg.max_slots,
             "free_cache_tokens": free * self.ecfg.max_len,
             "cache_tokens": self.ecfg.max_slots * self.ecfg.max_len,
+            "kv_cache_dtype": _kv_dtype_name(self.cfg),
+            "kv_bytes_per_token": self._kv_bytes_per_token,
             "waiting": len(self.waiting),
             "compile_events": self.compile_events,
             "total_buckets": self.total_buckets,
@@ -935,6 +977,17 @@ class PagedEngineConfig:
                                  # tokens per slot per step (attention-only
                                  # decoders; greedy-token-identical)
     spec_ngram: int = 3          # prompt-lookup match length for the proposer
+    cache_dtype: str = ""        # KV-pool storage: "" inherit model config,
+                                 # "f32" | "bf16" | "int8" (int8 = quantized
+                                 # pool + per-(page-slot, head) scales)
+    chained_tables: bool = False # two-level block tables: per-slot first-level
+                                 # rows of table-page ids resolve through a
+                                 # shared second-level pool — lifts the
+                                 # num_pages >= table_width coupling, so
+                                 # max_seq_len can exceed what a flat row
+                                 # over this pool could address
+    table_page_entries: int = 0  # chained: physical pages per second-level
+                                 # row (0 = page_size)
 
     @property
     def table_width(self) -> int:
@@ -963,12 +1016,15 @@ class PagedInferenceEngine(_EngineBase):
     """
 
     def __init__(self, cfg, pcfg: PagedEngineConfig, ctx=None, params=None, seed: int = 0):
+        cfg = _apply_cache_dtype(cfg, pcfg.cache_dtype)
         self.cfg = cfg
         self.pcfg = pcfg
         self.ctx = ctx
-        if pcfg.num_pages - 1 < pcfg.table_width:
+        if not pcfg.chained_tables and pcfg.num_pages - 1 < pcfg.table_width:
             # one max-length sequence must always fit, else admission can
-            # stall forever and the sole active sequence can never grow
+            # stall forever and the sole active sequence can never grow.
+            # Chained tables drop this coupling: the admission cap is
+            # re-derived from pool capacity instead (see _len_cap below).
             raise ValueError(
                 f"num_pages={pcfg.num_pages} cannot hold one max_seq_len={pcfg.max_seq_len} "
                 f"sequence ({pcfg.table_width} pages + reserved null page)"
@@ -983,10 +1039,19 @@ class PagedInferenceEngine(_EngineBase):
             )
         self.model = get_model(cfg)
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
-        self._max_new, self._eos, self._len_cap = pcfg.max_new_tokens, pcfg.eos_id, pcfg.max_seq_len
+        self._max_new, self._eos = pcfg.max_new_tokens, pcfg.eos_id
+        # Chained tables decouple max_seq_len from the pool: the admission
+        # length cap is then whatever the POOL can hold (one sequence can
+        # never exceed cache_tokens without self-deadlocking on growth) —
+        # with flat tables the constructor check above already guarantees
+        # max_seq_len <= cache_tokens.
+        self._len_cap = (
+            min(pcfg.max_seq_len, pcfg.cache_tokens)
+            if pcfg.chained_tables else pcfg.max_seq_len
+        )
         self._bucket_unit, self._bucket_on = pcfg.page_size, pcfg.bucket_prefill
         self._chunk_tokens = self._resolve_chunking(
-            cfg, pcfg.chunk_tokens, pcfg.page_size, pcfg.max_seq_len,
+            cfg, pcfg.chunk_tokens, pcfg.page_size, self._len_cap,
             require_divisible=False,   # tail overruns land on the null page
         )
         self._spec_tokens = self._resolve_spec(cfg, pcfg.spec_tokens)
@@ -996,8 +1061,25 @@ class PagedInferenceEngine(_EngineBase):
         self._prefill_shapes = set()
         self._compile_ema_s: Optional[float] = None
         self.lock = threading.RLock()
-        B, P = pcfg.max_slots, pcfg.table_width
+        B = pcfg.max_slots
+        if pcfg.chained_tables:
+            # Second-level geometry: a sequence can hold at most
+            # min(table_width, num_pages - 1) data pages, so the flat row a
+            # chain encodes is that many entries rounded up to whole table
+            # pages. The flat ``block_tab`` is STILL maintained (write-side
+            # paths — prefill scatter, context gather, verify — take
+            # host-flattened rows); only the batched decode walks the chain.
+            tpp = pcfg.table_page_entries or pcfg.page_size
+            max_pages = min(pcfg.table_width, pcfg.num_pages - 1)
+            self.chain: Optional[ChainedTables] = ChainedTables(B, -(-max_pages // tpp), tpp)
+            self._row_width = self.chain.width1 * tpp
+        else:
+            self.chain = None
+            self._row_width = pcfg.table_width
         self.cache = self.model.init_paged_cache(B, pcfg.num_pages, pcfg.page_size)
+        self._kv_bytes_per_token = _kv_bytes_per_token(
+            cfg, self.cache, pcfg.num_pages * pcfg.page_size
+        )
         self.allocator = BlockAllocator(pcfg.num_pages, pcfg.page_size)
         self.prefix_cache: Optional[PrefixCache] = (
             PrefixCache(self.allocator, pcfg.page_size) if pcfg.prefix_cache else None
@@ -1006,7 +1088,7 @@ class PagedInferenceEngine(_EngineBase):
         self.tables: List[Optional[PageTable]] = [None] * B
         self.slot_len = np.zeros(B, np.int32)
         self.slot_seq: List[Optional[Sequence]] = [None] * B
-        self.block_tab = np.full((B, P), NULL_PAGE, np.int32)
+        self.block_tab = np.full((B, self._row_width), NULL_PAGE, np.int32)
         self.waiting: Deque[Sequence] = deque()
         self.preemptions = 0
         self.peak_active = 0
@@ -1035,9 +1117,20 @@ class PagedInferenceEngine(_EngineBase):
             next_tok, cache = model.prefill_paged(ctx, params, batch, cache)
             return next_tok[0], cache
 
-        def decode_all(params, cache, last_tokens, lens, tab):
-            batch = {"token": last_tokens[:, None], "lengths": lens, "block_tab": tab}
-            return model.decode(ctx, params, cache, batch)
+        if self.chain is not None:
+            def decode_all(params, cache, last_tokens, lens, tab, l2):
+                # chained decode: tab is the (B, W1) first-level table, l2
+                # the shared second-level pool — the kernel resolves pages
+                # through both scalar-prefetched levels.
+                batch = {
+                    "token": last_tokens[:, None], "lengths": lens,
+                    "block_tab": tab, "l2_tab": l2,
+                }
+                return model.decode(ctx, params, cache, batch)
+        else:
+            def decode_all(params, cache, last_tokens, lens, tab):
+                batch = {"token": last_tokens[:, None], "lengths": lens, "block_tab": tab}
+                return model.decode(ctx, params, cache, batch)
 
         def copy_fork(cache, src_pages, dst_pages, src_slot, dst_slot):
             """Device-side copy-on-write for fork(): duplicate the trailing
@@ -1124,6 +1217,8 @@ class PagedInferenceEngine(_EngineBase):
             "num_pages": self.pcfg.num_pages - 1,
             "free_cache_tokens": self.allocator.free_pages * self.pcfg.page_size,
             "cache_tokens": self.pcfg.cache_tokens,
+            "kv_cache_dtype": _kv_dtype_name(self.cfg),
+            "kv_bytes_per_token": self._kv_bytes_per_token,
             "waiting": len(self.waiting),
             "compile_events": self.compile_events,
             "total_buckets": self.total_buckets,
@@ -1166,7 +1261,7 @@ class PagedInferenceEngine(_EngineBase):
         cache, whose admissions all ride the chunk machinery — the CHUNK
         path is what traffic runs, so that is what gets compiled."""
         toks = np.zeros(Lp, np.int32)
-        row = np.full(self.pcfg.table_width, NULL_PAGE, np.int32)
+        row = np.full(self._row_width, NULL_PAGE, np.int32)
         if self._chunk_tokens or self.prefix_cache is not None:
             _, self.cache, _ = self._prefill_chunk(
                 self.params, self.cache, jnp.asarray(toks), jnp.asarray(row),
@@ -1184,9 +1279,15 @@ class PagedInferenceEngine(_EngineBase):
         )
 
     def submit(self, prompt: List[int], trace=None) -> int:
-        if len(prompt) + self.pcfg.max_new_tokens > self.pcfg.max_seq_len:
+        # Gate on the engine's RESOLVED length cap, not raw max_seq_len: in
+        # chained mode the cap is re-derived from pool capacity (a prompt the
+        # pool can hold is admissible however max_seq_len relates to the flat
+        # table geometry), and in flat mode the two are identical anyway.
+        if len(prompt) + self.pcfg.max_new_tokens > self._len_cap:
             raise ValueError(
-                f"prompt ({len(prompt)}) + max_new_tokens exceeds max_seq_len={self.pcfg.max_seq_len}"
+                f"prompt ({len(prompt)}) + max_new_tokens exceeds the length "
+                f"cap {self._len_cap} (max_seq_len={self.pcfg.max_seq_len}, "
+                f"pool={self.pcfg.cache_tokens} tokens)"
             )
         return super().submit(prompt, trace=trace)
 
@@ -1196,6 +1297,19 @@ class PagedInferenceEngine(_EngineBase):
                 return i
         return None
 
+    def _sync_row(self, slot: int) -> None:
+        """Single owner of the host block-table views after ANY page-list
+        change (install, growth, spec grow/trim, fork, release): rewrites the
+        slot's flat row and, in chained mode, re-chains its first/second
+        -level entries — so the two views can never disagree."""
+        table = self.tables[slot]
+        pages = table.pages if table is not None else []
+        self.block_tab[slot, :] = (
+            table.row(self._row_width) if pages else NULL_PAGE
+        )
+        if self.chain is not None:
+            self.chain.set_row(slot, pages)
+
     def _install(self, slot: int, seq: Sequence, table: PageTable) -> int:
         """Prefill seq's full context (bucket-padded) through ``table`` into
         slot; returns the emitted next token. Pad positions past the
@@ -1203,7 +1317,7 @@ class PagedInferenceEngine(_EngineBase):
         ctx_toks = seq.context_tokens()
         table.num_tokens = len(ctx_toks)
         self.tables[slot] = table
-        self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+        self._sync_row(slot)
         toks, n, _, fresh = self._pad_context(ctx_toks)
         tr = seq.trace
         tr0 = time.monotonic() if tr is not None else 0.0
@@ -1271,7 +1385,7 @@ class PagedInferenceEngine(_EngineBase):
         self.tables[slot] = None
         self.slot_seq[slot] = None
         self.slot_len[slot] = 0
-        self.block_tab[slot, :] = NULL_PAGE
+        self._sync_row(slot)
         self._stamp[slot] = 0
         # a preempted PREFILLING slot drops its chunk progress: re-admission
         # restarts the chunked prefill from scratch with a fresh zero carry
@@ -1323,7 +1437,7 @@ class PagedInferenceEngine(_EngineBase):
                 )
                 table.num_tokens = ctx_len
                 self.tables[slot] = table
-                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+                self._sync_row(slot)
                 self._cache_nodes[slot] = hit_node
                 self._begin_chunked(slot, seq, start=hit_tokens)
                 continue
@@ -1334,7 +1448,7 @@ class PagedInferenceEngine(_EngineBase):
                 table = PageTable(self.pcfg.page_size, self.allocator.alloc(need))
                 table.num_tokens = ctx_len
                 self.tables[slot] = table
-                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+                self._sync_row(slot)
                 self._begin_chunked(slot, seq)
                 continue
             Lp = self._bucket_len(ctx_len)
@@ -1392,7 +1506,7 @@ class PagedInferenceEngine(_EngineBase):
                         break
                     continue
                 self.tables[slot].append_pages(self.allocator.alloc(1))
-                self.block_tab[slot, :] = self.tables[slot].row(self.pcfg.table_width)
+                self._sync_row(slot)
 
     def _spec_phase(self, active: List[int], spent: int, budget: int):
         """Speculate on decoding slots at the decode frontier (see the dense
@@ -1425,7 +1539,7 @@ class PagedInferenceEngine(_EngineBase):
                 if not self._reserve_pages(need, seq):
                     continue               # pool dry: degrade to plain decode
                 table.append_pages(self.allocator.alloc(need))
-                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+                self._sync_row(slot)
             toks, self.cache = self._verify(
                 self.params,
                 self.cache,
@@ -1439,7 +1553,7 @@ class PagedInferenceEngine(_EngineBase):
             m, done = self._accept_verified(slot, seq, proposal, np.asarray(toks), k_eff)
             keep = max(n0, PageTable.pages_needed(L + m, ps))
             if table.trim(keep, self.allocator):
-                self.block_tab[slot, :] = table.row(self.pcfg.table_width)
+                self._sync_row(slot)
             table.num_tokens = L + m
             sped.append(slot)
             if done:
@@ -1486,13 +1600,23 @@ class PagedInferenceEngine(_EngineBase):
                 active = [i for i in active if i not in set(sped)]
             finished, self._just_finished = self._just_finished, []
             if active:
-                nxt, self.cache = self._decode(
-                    self.params,
-                    self.cache,
-                    jnp.asarray(self._last),
-                    jnp.asarray(self.slot_len),
-                    jnp.asarray(self.block_tab),
-                )
+                if self.chain is not None:
+                    nxt, self.cache = self._decode(
+                        self.params,
+                        self.cache,
+                        jnp.asarray(self._last),
+                        jnp.asarray(self.slot_len),
+                        jnp.asarray(self.chain.l1),
+                        jnp.asarray(self.chain.l2),
+                    )
+                else:
+                    nxt, self.cache = self._decode(
+                        self.params,
+                        self.cache,
+                        jnp.asarray(self._last),
+                        jnp.asarray(self.slot_len),
+                        jnp.asarray(self.block_tab),
+                    )
                 nxt = np.asarray(nxt)
                 tok_t = time.monotonic()      # one stamp per batched decode step
                 for i in active:
@@ -1554,7 +1678,7 @@ class PagedInferenceEngine(_EngineBase):
                 jnp.asarray(dst),
             )
             self.tables[dst] = new_table
-            self.block_tab[dst, :] = new_table.row(self.pcfg.table_width)
+            self._sync_row(dst)
             self.slot_seq[dst] = clone
             self.slot_len[dst] = self.slot_len[src]
             self._last[dst] = self._last[src]

@@ -34,6 +34,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List
 
+import numpy as np
+
 NULL_PAGE = 0
 
 
@@ -219,3 +221,103 @@ class PageTable:
         allocator.free(self.pages)
         self.pages = []
         self.num_tokens = 0
+
+
+class ChainedTables:
+    """Two-level ("chained") block tables for long-context sequences.
+
+    A flat block table is a device array of shape ``(max_slots, W)`` where
+    ``W`` must cover the longest admissible sequence — at long context the
+    per-slot row (and the scalar-prefetch footprint the decode kernel pays
+    for it) grows linearly with ``max_seq_len``. Chaining splits the map in
+    two: each slot's first-level row (``l1``, width ``ceil(W / tpp)``) holds
+    *table-page* ids — rows of the shared second-level pool ``l2`` of shape
+    ``(n_rows, tpp)`` — and logical block ``i`` resolves to
+    ``l2[l1[slot, i // tpp], i % tpp]``. Table pages are allocated on demand
+    from a FIFO free list (mirroring ``BlockAllocator``), so a short
+    sequence in a long-context engine consumes first-level entries only.
+
+    Row 0 of ``l2`` is reserved as the all-null table page (the indirection
+    twin of ``NULL_PAGE``): unused l1 entries point at it and resolve to the
+    null data page, so every two-step lookup the kernels perform lands on a
+    valid physical page.
+
+    ``n_rows`` is worst-case sized by the caller (every slot holding a
+    full-width row) so ``set_row`` can never fail — table-page exhaustion
+    would otherwise be a second admission failure mode interleaved with data
+    -page exhaustion, and the engine's all-or-nothing admission contract is
+    easier to keep when only data pages can run out.
+    """
+
+    def __init__(self, max_slots: int, width1: int, tpp: int):
+        if tpp < 1 or width1 < 1:
+            raise ValueError("width1 and tpp must be >= 1")
+        self.tpp = tpp
+        self.width1 = width1
+        n_rows = 1 + max_slots * width1
+        self.l1 = np.zeros((max_slots, width1), np.int32)       # 0 -> null row
+        self.l2 = np.full((n_rows, tpp), NULL_PAGE, np.int32)
+        self._free: Deque[int] = deque(range(1, n_rows))
+        self._owned: List[List[int]] = [[] for _ in range(max_slots)]
+
+    @property
+    def free_rows(self) -> int:
+        return len(self._free)
+
+    def set_row(self, slot: int, pages: List[int]) -> None:
+        """Point ``slot`` at ``pages`` (a flat physical-page row, null-padded
+        or not): allocates the table pages the row needs, writes them, and
+        returns the slot's previous table pages to the free list. Called at
+        every host point where a flat engine would rewrite its block-table
+        row, so the device view is always whole-row consistent."""
+        if len(pages) > self.width1 * self.tpp:
+            raise ValueError(
+                f"row of {len(pages)} pages exceeds chained capacity "
+                f"{self.width1 * self.tpp}"
+            )
+        # Trailing null-page entries need no table page — they resolve
+        # through the reserved null row.
+        n = len(pages)
+        while n > 0 and pages[n - 1] == NULL_PAGE:
+            n -= 1
+        need = -(-n // self.tpp) if n else 0
+        rows = self._owned[slot]
+        while len(rows) > need:
+            r = rows.pop()
+            self.l2[r, :] = NULL_PAGE
+            self._free.append(r)
+        while len(rows) < need:
+            rows.append(self._free.popleft())
+        for j, r in enumerate(rows):
+            chunk = pages[j * self.tpp:(j + 1) * self.tpp]
+            self.l2[r, :len(chunk)] = chunk
+            self.l2[r, len(chunk):] = NULL_PAGE
+        self.l1[slot, :len(rows)] = rows
+        self.l1[slot, len(rows):] = 0
+
+    def clear(self, slot: int) -> None:
+        self.set_row(slot, [])
+
+    def flat_row(self, slot: int) -> List[int]:
+        """Reconstruct the flat physical row this slot's chain encodes
+        (width1 * tpp entries, null-padded) — the oracle the fuzz tests
+        compare against the flat table the engine also maintains."""
+        out: List[int] = []
+        for r in self.l1[slot]:
+            out.extend(int(p) for p in self.l2[int(r)])
+        return out
+
+    def check_invariants(self, max_slots: int) -> None:
+        free = set(self._free)
+        owned = [r for rows in self._owned for r in rows]
+        assert 0 not in free and 0 not in owned
+        assert len(owned) == len(set(owned)), "l2 row owned twice"
+        assert not (free & set(owned)), free & set(owned)
+        assert len(free) + len(owned) == self.l2.shape[0] - 1
+        assert (self.l2[0] == NULL_PAGE).all(), "null table row corrupted"
+        for s in range(max_slots):
+            rows = self._owned[s]
+            assert list(self.l1[s, :len(rows)]) == rows
+            assert (self.l1[s, len(rows):] == 0).all()
+        for r in free:
+            assert (self.l2[r] == NULL_PAGE).all(), f"free row {r} not nulled"

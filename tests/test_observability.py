@@ -397,9 +397,11 @@ def test_sampler_series_and_prometheus_gauges():
     assert latest == {
         "t": 4.0, "occupancy": 0.75, "free_pages": 2, "free_slots": 1,
         "queue_depth": 3, "prefill_backlog": 7, "warmth": 0.5,
-        # no prefix cache on this probe: keys sampled as unknown, exported
-        # as no gauge at all (None values never reach the registry)
+        # no prefix cache or quantized pool on this probe: keys sampled as
+        # unknown, exported as no gauge at all (None values never reach the
+        # registry)
         "cached_pages": None, "prefix_hit_rate": None,
+        "kv_bytes_per_token": None, "kv_cache_dtype": None,
     }
     assert [x["t"] for x in s.window("docker", last_s=2.0)] == [2.0, 3.0, 4.0]
     assert reg.gauge("tier_occupancy", {"tier": "docker"}).value == 0.75

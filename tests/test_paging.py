@@ -691,3 +691,83 @@ def test_place_all_big_payloads_consume_docker_availability():
     ds = pol.place_all(reqs, f_t=0.0, flask_free=0, docker_free=1)
     assert ds[0].tier == Tier.DOCKER
     assert ds[1].tier == Tier.SERVERLESS          # docker slot already consumed
+
+
+# ---------------------------------------------------------------------------
+# Chained (two-level) block tables
+# ---------------------------------------------------------------------------
+
+
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["set", "grow", "trim", "clear", "pad"]),
+            st.integers(0, 3),             # slot
+            st.integers(0, 12),            # row length the op targets
+        ),
+        min_size=1,
+        max_size=60,
+    )
+)
+@settings(max_examples=120, deadline=None)
+def test_chained_tables_match_flat_oracle_under_random_interleavings(ops):
+    """ChainedTables is the engine's device-side view of per-slot page rows:
+    drive the rewrite patterns the engine produces — whole-row set (admit /
+    resume / fork), grow by one page, trim (spec-decode rollback), clear
+    (release), and null-padded rows (the engine passes ``table.row(width)``
+    verbatim) — and assert after every op that (a) ``flat_row`` re-derives
+    exactly the flat row a one-level table would hold, and (b) the l2 row
+    free-list/ownership invariants hold (no leak, no double-own, null row
+    intact). Clearing every slot must return all table pages."""
+    from repro.serving.paging import ChainedTables
+
+    MAX_SLOTS, W1, TPP = 4, 3, 4
+    ct = ChainedTables(MAX_SLOTS, W1, TPP)
+    oracle = {s: [] for s in range(MAX_SLOTS)}   # slot -> non-null page list
+    next_page = [1]
+
+    def pages(n):
+        out = list(range(next_page[0], next_page[0] + n))
+        next_page[0] += n
+        return out
+
+    for op, slot, n in ops:
+        if op == "set":
+            oracle[slot] = pages(n)
+            ct.set_row(slot, oracle[slot])
+        elif op == "grow":
+            if len(oracle[slot]) < W1 * TPP:
+                oracle[slot] = oracle[slot] + pages(1)
+            ct.set_row(slot, oracle[slot])
+        elif op == "trim":
+            oracle[slot] = oracle[slot][: n % (len(oracle[slot]) + 1)]
+            ct.set_row(slot, oracle[slot])
+        elif op == "clear":
+            oracle[slot] = []
+            ct.clear(slot)
+        elif op == "pad":
+            # engine-style: a full-width row with trailing null padding must
+            # cost exactly the table pages the real prefix needs
+            row = oracle[slot] + [NULL_PAGE] * (W1 * TPP - len(oracle[slot]))
+            ct.set_row(slot, row)
+        ct.check_invariants(MAX_SLOTS)
+        for s in range(MAX_SLOTS):
+            want = oracle[s] + [NULL_PAGE] * (W1 * TPP - len(oracle[s]))
+            assert ct.flat_row(s) == want, (s, oracle[s])
+        used_rows = sum(-(-len(r) // TPP) for r in oracle.values())
+        assert ct.free_rows == ct.l2.shape[0] - 1 - used_rows
+
+    for s in range(MAX_SLOTS):
+        ct.clear(s)
+    ct.check_invariants(MAX_SLOTS)
+    assert ct.free_rows == ct.l2.shape[0] - 1
+
+
+def test_chained_tables_reject_overlong_row():
+    from repro.serving.paging import ChainedTables
+
+    ct = ChainedTables(2, 2, 4)
+    with pytest.raises(ValueError, match="chained capacity"):
+        ct.set_row(0, list(range(1, 10)))
+    ct.check_invariants(2)
+    assert ct.free_rows == ct.l2.shape[0] - 1     # failed set leaks nothing
