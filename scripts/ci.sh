@@ -16,6 +16,23 @@ if python -c "import pytest_timeout" 2>/dev/null; then
     TIMEOUT_ARGS=(--timeout=300 --timeout-method=thread)
 fi
 
+# Static-analysis gate (stdlib-only, no model compiles, < 60 s): locklint +
+# lockorder + kernelcheck over the serving stack with zero unexplained
+# findings, the committed lock-order artifact fresh against the tree, and
+# the analyzer/witness test subset green (engine-backed soaks deselected —
+# the full pytest run below still exercises them). `scripts/ci.sh analyze`
+# runs only this subset and exits, so it can gate before the slow suite.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis \
+    --check-graph docs/lock_order.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    ${TIMEOUT_ARGS[@]+"${TIMEOUT_ARGS[@]}"} \
+    tests/test_analysis.py tests/test_lock_witness.py tests/test_shutdown_safety.py \
+    -k "not engine"
+if [[ "${1:-}" == "analyze" ]]; then
+    echo "ci.sh: analyze subset passed"
+    exit 0
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q ${TIMEOUT_ARGS[@]+"${TIMEOUT_ARGS[@]}"} "$@"
 
 # Model-config smoke subset (forward + grad + prefill/decode per family) so

@@ -1,0 +1,27 @@
+"""Static-analysis tier for the serving runtime's concurrency + kernel contracts.
+
+After PRs 3-9 the repo is a genuinely concurrent runtime (~84 lock sites across
+router / engine / scheduler / telemetry / tracing / prefix cache) whose
+correctness rests on documented-but-unenforced contracts: "one stepper, many
+submitters", lock-free ``capacity_now()`` snapshots, exactly-once hedge
+accounting, and the kernel-family layout rules in ``kernels/__init__``.  This
+package turns those contracts into machine-checked invariants:
+
+- ``locklint``     lock-discipline linter: guarded fields only touched under
+                   their lock; no blocking calls / device dispatch while a
+                   strict lock is held.
+- ``lockorder``    static may-acquire-under graph + cycle (deadlock) detection;
+                   emits a dot/JSON artifact that doubles as documentation.
+- ``witness``      runtime instrumented Lock/RLock recording *actual*
+                   acquisition order during the concurrency soaks and checking
+                   it against the static graph.  Static analysis proposes, the
+                   witness disposes.
+- ``kernelcheck``  kernel-family contract: kernel.py/ref.py/parity-test
+                   triples, ``input_output_aliases`` on in-place pool writes,
+                   no traced ops in index maps.
+
+Everything is stdlib-``ast`` based -- no new dependencies.  Run the whole tier
+with ``python -m repro.analysis`` (see ``scripts/ci.sh analyze``).
+"""
+
+from .common import Finding, SourceFile  # noqa: F401

@@ -1,0 +1,276 @@
+"""Kernel-family contract checker for ``src/repro/kernels/*``.
+
+The repo's kernel layout rule (``kernels/__init__``): every family ships
+``kernel.py`` (Pallas) + ``ref.py`` (pure-jnp oracle, possibly a re-export of
+the model-side reference) + ``ops.py`` (model-facing wrapper), and a parity
+test that imports both sides.  This checker enforces that, plus three Pallas
+footguns that type-check fine and corrupt results on hardware:
+
+- **in-place-no-alias**: a ``pallas_call`` whose ``out_shape`` mirrors an
+  operand's ``(x.shape, x.dtype)`` is an in-place pool update and must declare
+  ``input_output_aliases`` -- otherwise XLA materializes a full copy of the
+  pool per step (or, with donation elsewhere, reads freed buffers).
+- **traced-index-map**: ``jnp.*``/``jax.*`` calls inside a BlockSpec index-map
+  lambda.  Index maps run at trace time over scalar-prefetch refs; a traced op
+  there either fails at lowering or silently defeats prefetching.
+- **shape-branch-in-kernel**: Python ``if``/``while`` on ``.shape`` inside a
+  kernel body.  Shapes are static per bucket, so such branches bake the
+  compiling bucket's decision into *every* bucket that shares the kernel --
+  branch in the wrapper (``ops.py``) instead, where each shape re-traces.
+
+Suppress a site with ``# kernelcheck: ok <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .common import Finding, SourceFile, apply_suppression, dotted_name, unparse
+
+TOOL = "kernelcheck"
+
+
+@dataclass
+class RefExports:
+    """What a family's ref.py offers: local defs + re-exported (module, name)
+    pairs, so a parity test may import either the ref module itself or the
+    oracle the ref re-exports."""
+    symbols: Set[str] = field(default_factory=set)
+    origins: Set[Tuple[str, str]] = field(default_factory=set)  # (module, name)
+
+
+def _ref_exports(src: SourceFile) -> RefExports:
+    out = RefExports()
+    for node in src.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.symbols.add(node.name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out.symbols.add(alias.asname or alias.name)
+                out.origins.add((node.module, alias.name))
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and not t.id.startswith("_"):
+                    out.symbols.add(t.id)
+    return out
+
+
+@dataclass
+class _TestImports:
+    modules: Set[str] = field(default_factory=set)          # imported module paths
+    from_names: Set[Tuple[str, str]] = field(default_factory=set)  # (module, name)
+
+
+def _test_imports(src: SourceFile) -> _TestImports:
+    out = _TestImports()
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.modules.add(alias.name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            out.modules.add(node.module)
+            for alias in node.names:
+                out.from_names.add((node.module, alias.name))
+    return out
+
+
+class KernelCheck:
+    def __init__(self, kernels_root: str, tests_root: str):
+        self.kernels_root = Path(kernels_root)
+        self.tests_root = Path(tests_root)
+        self.findings: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        families = sorted(
+            d for d in self.kernels_root.iterdir()
+            if d.is_dir() and not d.name.startswith("_")
+        )
+        test_srcs = [SourceFile.load(p) for p in sorted(self.tests_root.glob("test_*.py"))]
+        test_imports = [(s, _test_imports(s)) for s in test_srcs]
+        for fam in families:
+            self._check_family(fam, test_imports)
+        return self.findings
+
+    # -- per-family layout + parity-test checks -----------------------------
+    def _check_family(self, fam: Path,
+                      test_imports: List[Tuple[SourceFile, _TestImports]]) -> None:
+        name = fam.name
+        kernel_py = fam / "kernel.py"
+        ref_py = fam / "ref.py"
+        if not kernel_py.exists():
+            self._raw(str(fam), 1, "missing-kernel", f"family {name} has no kernel.py")
+            return
+        ksrc = SourceFile.load(kernel_py)
+        if not ref_py.exists():
+            self._raw(str(kernel_py), 1, "missing-ref",
+                      f"family {name} has no ref.py oracle to test parity against")
+            exports = RefExports()
+        else:
+            rsrc = SourceFile.load(ref_py)
+            exports = _ref_exports(rsrc)
+            if not exports.symbols:
+                self._report(rsrc, 1, "empty-ref",
+                             f"family {name}: ref.py exports no symbols")
+
+        fam_mod = f"repro.kernels.{name}"
+        kernel_side = False
+        ref_side = False
+        for _, imps in test_imports:
+            refs_kernel = any(
+                m == fam_mod or m.startswith(fam_mod + ".") for m in imps.modules
+            ) or any(m == fam_mod for m, _ in imps.from_names)
+            refs_ref = (
+                f"{fam_mod}.ref" in imps.modules
+                or any(m == f"{fam_mod}.ref" for m, _ in imps.from_names)
+                or any((m, n) in exports.origins for m, n in imps.from_names)
+            )
+            # a kernel-side reference must not be *only* the ref import
+            refs_kernel_proper = any(
+                m in (fam_mod, f"{fam_mod}.kernel", f"{fam_mod}.ops")
+                or m.startswith(fam_mod + ".kernel") or m.startswith(fam_mod + ".ops")
+                for m in imps.modules
+            )
+            if refs_kernel_proper:
+                kernel_side = True
+            if refs_ref and refs_kernel_proper:
+                ref_side = True
+        if ref_py.exists() and not ref_side:
+            self._report(
+                ksrc, 1, "missing-parity-test",
+                f"family {name}: no test under {self.tests_root.name}/ imports both "
+                f"the kernel/ops side and its ref oracle (parity is unguarded)",
+            )
+        elif not kernel_side:
+            self._report(ksrc, 1, "missing-parity-test",
+                         f"family {name}: no test imports the kernel at all")
+
+        # -- Pallas footguns in kernel.py (and ops.py wrappers) -------------
+        self._check_pallas(ksrc)
+        ops_py = fam / "ops.py"
+        if ops_py.exists():
+            self._check_pallas(SourceFile.load(ops_py))
+
+    def _check_pallas(self, src: SourceFile) -> None:
+        kernel_bodies: Set[str] = set()
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) and _is_pallas_call(node):
+                kernel_bodies |= self._check_one_call(src, node)
+        if kernel_bodies:
+            for node in src.tree.body:
+                if isinstance(node, ast.FunctionDef) and node.name in kernel_bodies:
+                    self._check_kernel_body(src, node)
+        # index maps can appear anywhere a BlockSpec is built
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) and _callee_leaf(node) == "BlockSpec":
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Lambda):
+                        self._check_index_map(src, arg)
+                    elif isinstance(arg, ast.Name):
+                        fn = _local_def(src, arg.id)
+                        if fn is not None:
+                            self._check_index_map(src, fn)
+
+    def _check_one_call(self, src: SourceFile, call: ast.Call) -> Set[str]:
+        """Check one pl.pallas_call(...) and return kernel-body names."""
+        bodies: Set[str] = set()
+        if call.args:
+            first = call.args[0]
+            if isinstance(first, ast.Name):
+                bodies.add(first.id)
+            elif isinstance(first, ast.Call) and _callee_leaf(first) == "partial":
+                if first.args and isinstance(first.args[0], ast.Name):
+                    bodies.add(first.args[0].id)
+
+        kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+        has_aliases = "input_output_aliases" in kwargs
+
+        inplace = _inplace_outputs(kwargs.get("out_shape"))
+        if inplace and not has_aliases:
+            self._report(
+                src, call.lineno, "in-place-no-alias",
+                f"pallas_call output(s) {sorted(inplace)} mirror operand shape/dtype "
+                f"(in-place pool update) but declare no input_output_aliases; "
+                f"XLA will copy the pool every step",
+            )
+        return bodies
+
+    def _check_index_map(self, src: SourceFile, fn) -> None:
+        body = fn.body if isinstance(fn, ast.Lambda) else fn
+        for node in ast.walk(body if isinstance(body, ast.AST) else fn):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func) or ""
+                if name.startswith("jnp.") or name.startswith("jax."):
+                    self._report(
+                        src, node.lineno, "traced-index-map",
+                        f"traced op {name}(...) inside a BlockSpec index map; "
+                        f"index maps must be pure int arithmetic over "
+                        f"scalar-prefetch refs",
+                    )
+
+    def _check_kernel_body(self, src: SourceFile, fn: ast.FunctionDef) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                for sub in ast.walk(node.test):
+                    if isinstance(sub, ast.Attribute) and sub.attr == "shape":
+                        self._report(
+                            src, node.lineno, "shape-branch-in-kernel",
+                            f"shape-dependent Python branch on "
+                            f"`{unparse(node.test)}` inside kernel body "
+                            f"{fn.name}; branch in the ops.py wrapper instead",
+                        )
+                        break
+
+    def _report(self, src: SourceFile, line: int, code: str, message: str) -> None:
+        f = Finding(tool=TOOL, path=src.path, line=line, code=code, message=message)
+        self.findings.append(apply_suppression(src, f))
+
+    def _raw(self, path: str, line: int, code: str, message: str) -> None:
+        self.findings.append(Finding(tool=TOOL, path=path, line=line,
+                                     code=code, message=message))
+
+
+def _callee_leaf(call: ast.Call) -> str:
+    name = dotted_name(call.func) or ""
+    return name.split(".")[-1]
+
+
+def _is_pallas_call(call: ast.Call) -> bool:
+    return _callee_leaf(call) == "pallas_call"
+
+
+#: operand names that denote a persistent KV/state pool: an output declared as
+#: ShapeDtypeStruct(<pool>.shape, <pool>.dtype) is an in-place pool update,
+#: not a fresh result buffer (those mirror activations like q/x, not pools).
+POOL_NAME = re.compile(r"(pool|cache|_kv|kv_|scales|state)", re.IGNORECASE)
+
+
+def _inplace_outputs(out_shape: Optional[ast.AST]) -> Set[str]:
+    """Pool-like operand names whose ShapeDtypeStruct(x.shape, x.dtype)
+    appears in out_shape -- the in-place-update signature."""
+    if out_shape is None:
+        return set()
+    hits: Set[str] = set()
+    for node in ast.walk(out_shape):
+        if not (isinstance(node, ast.Call) and _callee_leaf(node) == "ShapeDtypeStruct"):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if (isinstance(arg, ast.Attribute) and arg.attr in ("shape", "dtype")
+                    and isinstance(arg.value, ast.Name)
+                    and POOL_NAME.search(arg.value.id)):
+                hits.add(arg.value.id)
+    return hits
+
+
+def _local_def(src: SourceFile, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def check(kernels_root: str, tests_root: str) -> List[Finding]:
+    return KernelCheck(kernels_root, tests_root).run()

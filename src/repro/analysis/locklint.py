@@ -1,0 +1,409 @@
+"""Lock-discipline linter (stdlib-ast) for the concurrent serving runtime.
+
+Two rules, both scoped by lightweight in-source declarations:
+
+1. **Guarded fields.**  A field declared ``# guarded by: _lock`` on its
+   assignment line (or listed in a class-level ``_GUARDED`` dict) may only be
+   touched lexically inside ``with self._lock`` (holding the Condition built
+   on a lock counts as holding the lock).  Exemptions: ``__init__`` /
+   ``__post_init__`` (happens-before publication), methods named ``*_locked``
+   (documented caller-holds-the-lock helpers), and reasoned inline
+   suppressions.  Cross-object accesses (``b.queue`` from the router) are
+   checked too when the field name is unambiguous across analyzed classes.
+
+2. **No blocking under a strict lock.**  While a lock is held, calls that can
+   block -- ``Condition.wait`` (on a *different* primitive), ``Future.result``,
+   ``Thread.join``, ``time.sleep`` -- and jit/device dispatch
+   (``step``/``generate``/``prefill*``/``decode*``/``verify*``/
+   ``block_until_ready``) are findings.  This is what makes the engine's
+   "never block the step-loop registry lock" rule and ``capacity_now()``'s
+   lock-free-snapshot contract machine-checked.  A lock whose *contract* is to
+   be held across device work (the engine's coarse step RLock: one stepper
+   owns the donated buffers) opts out once, visibly, at its declaration with
+   ``# locklint: blocking-ok <reason>``.
+
+Suppress a single site with ``# locklint: ok <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .common import (
+    Finding,
+    SourceFile,
+    apply_suppression,
+    dotted_name,
+    guarded_decl,
+    unparse,
+)
+
+TOOL = "locklint"
+
+LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+#: attribute names treated as lock-like even without a visible declaration
+LOCKISH = re.compile(r"(^|_)(lock|cond|mutex)$")
+BLOCKING_ATTRS = {"wait", "join", "result"}
+#: jit/device dispatch: the names the serving stack uses for compiled calls
+DEVICE_DISPATCH = re.compile(
+    r"^(step|step_once|generate|block_until_ready|device_put"
+    r"|_?prefill\w*|_?decode\w*|_?verify\w*|_install_carry|_copy_fork)$"
+)
+
+
+@dataclass
+class LockDecl:
+    cls: str               # owning class name ("" for module-level)
+    attr: str              # attribute name on the instance
+    kind: str              # Lock | RLock | Condition | ...
+    line: int
+    policy: str = "strict"          # strict | blocking-ok
+    policy_reason: str = ""
+    cond_base: Optional[str] = None  # for Condition(self.X): the lock attr X
+
+
+@dataclass
+class ClassLocks:
+    name: str
+    bases: List[str] = field(default_factory=list)
+    locks: Dict[str, LockDecl] = field(default_factory=dict)
+    guarded: Dict[str, str] = field(default_factory=dict)  # field -> lock attr
+
+    def lock_group(self, attr: str) -> Set[str]:
+        """All attr names equivalent to holding ``attr`` (a Condition and its
+        base lock are the same underlying mutex)."""
+        group = {attr}
+        decl = self.locks.get(attr)
+        if decl and decl.cond_base:
+            group.add(decl.cond_base)
+        for other in self.locks.values():
+            if other.cond_base and other.cond_base in group:
+                group.add(other.attr)
+        return group
+
+
+def collect_lock_decls(sources: Sequence[SourceFile]) -> Dict[str, ClassLocks]:
+    """First pass over all modules: lock declarations, policies, guarded
+    fields.  Keyed by class name (assumed unique across the analyzed set --
+    true for this repo, and ambiguity would only widen checks)."""
+    classes: Dict[str, ClassLocks] = {}
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = classes.setdefault(node.name, ClassLocks(node.name))
+            for b in node.bases:
+                base = dotted_name(b)
+                if base:
+                    info.bases.append(base.split(".")[-1])
+            _collect_class(src, node, info)
+    return classes
+
+
+def class_families(classes: Dict[str, ClassLocks]) -> Dict[str, Set[str]]:
+    """Union-find over inheritance among analyzed classes: ``self.lock`` in a
+    base class resolves against declarations made anywhere in its family
+    (e.g. ``_EngineBase`` methods use the RLock its subclasses create)."""
+    parent: Dict[str, str] = {n: n for n in classes}
+
+    def find(x: str) -> str:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for name, info in classes.items():
+        for b in info.bases:
+            if b in classes:
+                parent[find(name)] = find(b)
+    families: Dict[str, Set[str]] = {}
+    for name in classes:
+        families.setdefault(find(name), set()).add(name)
+    return {name: families[find(name)] for name in classes}
+
+
+def family_lock_decls(classes: Dict[str, ClassLocks],
+                      families: Dict[str, Set[str]],
+                      cls_name: str, attr: str) -> List[LockDecl]:
+    """All declarations of ``self.<attr>`` visible to ``cls_name`` through its
+    inheritance family, declaring-class-sorted for determinism."""
+    out = []
+    for member in sorted(families.get(cls_name, {cls_name})):
+        info = classes.get(member)
+        if info is not None and attr in info.locks:
+            out.append(info.locks[attr])
+    return out
+
+
+def _collect_class(src: SourceFile, cls: ast.ClassDef, info: ClassLocks) -> None:
+    for stmt in cls.body:
+        # class-level _GUARDED = {"field": "_lock"}
+        if isinstance(stmt, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "_GUARDED" for t in stmt.targets
+        ):
+            if isinstance(stmt.value, ast.Dict):
+                for k, v in zip(stmt.value.keys, stmt.value.values):
+                    if isinstance(k, ast.Constant) and isinstance(v, ast.Constant):
+                        info.guarded[str(k.value)] = str(v.value)
+        # dataclass field line: queue: Deque = field(...)  # guarded by: cond
+        if isinstance(stmt, (ast.AnnAssign, ast.Assign)):
+            target = stmt.target if isinstance(stmt, ast.AnnAssign) else (
+                stmt.targets[0] if stmt.targets else None
+            )
+            if isinstance(target, ast.Name):
+                lock_attr = guarded_decl(src.comment_at(stmt.lineno))
+                if lock_attr:
+                    info.guarded[target.id] = lock_attr
+
+    for fn in [n for n in ast.walk(cls) if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                target = stmt.target if isinstance(stmt, ast.AnnAssign) else (
+                    stmt.targets[0] if len(getattr(stmt, "targets", [])) == 1 else None
+                )
+                if not (
+                    isinstance(target, ast.Attribute)
+                    and isinstance(target.value, ast.Name)
+                    and target.value.id == "self"
+                ):
+                    continue
+                attr = target.attr
+                value = stmt.value
+                decl = _lock_factory(value)
+                if decl is not None:
+                    kind, cond_base = decl
+                    ld = LockDecl(cls=info.name, attr=attr, kind=kind,
+                                  line=stmt.lineno, cond_base=cond_base)
+                    comment = src.comment_at(stmt.lineno)
+                    if comment.startswith(f"{TOOL}: blocking-ok"):
+                        ld.policy = "blocking-ok"
+                        ld.policy_reason = comment[len(f"{TOOL}: blocking-ok"):].strip()
+                    info.locks[attr] = ld
+                else:
+                    lock_attr = guarded_decl(src.comment_at(stmt.lineno))
+                    if lock_attr:
+                        info.guarded[attr] = lock_attr
+
+
+def _lock_factory(value: Optional[ast.AST]) -> Optional[Tuple[str, Optional[str]]]:
+    """(kind, condition_base_attr) when ``value`` constructs a threading
+    primitive, else None."""
+    if not isinstance(value, ast.Call):
+        return None
+    name = dotted_name(value.func) or ""
+    leaf = name.split(".")[-1]
+    if leaf not in LOCK_FACTORIES:
+        return None
+    cond_base = None
+    if leaf == "Condition" and value.args:
+        arg = value.args[0]
+        if (isinstance(arg, ast.Attribute) and isinstance(arg.value, ast.Name)
+                and arg.value.id == "self"):
+            cond_base = arg.attr
+    return leaf, cond_base
+
+
+@dataclass
+class _Held:
+    expr: str            # source text of the with item, e.g. "self._lock", "b.cond"
+    base: str            # "self" / "b" / ...
+    attr: str            # "_lock" / "cond"
+    policy: str          # strict | blocking-ok
+
+
+class _FunctionLinter(ast.NodeVisitor):
+    """Walks one method body tracking the lexically-held lock set."""
+
+    def __init__(self, analyzer: "LockLint", src: SourceFile,
+                 cls: Optional[ClassLocks], fn: ast.FunctionDef):
+        self.a = analyzer
+        self.src = src
+        self.cls = cls
+        self.fn = fn
+        self.held: List[_Held] = []
+        self.reported: Set[Tuple[int, str]] = set()
+        self.exempt_guarded = (
+            fn.name in ("__init__", "__post_init__")
+            or fn.name.endswith("_locked")
+        )
+
+    # -- lock scope tracking ------------------------------------------------
+    def visit_With(self, node: ast.With) -> None:
+        pushed = 0
+        for item in node.items:
+            held = self.a.as_lock(item.context_expr, self.cls)
+            if held is not None:
+                self.held.append(held)
+                pushed += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in range(pushed):
+            self.held.pop()
+
+    visit_AsyncWith = visit_With  # pragma: no cover - no async in the stack
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # a nested def runs later, outside this lexical lock scope
+        saved, self.held = self.held, []
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        saved, self.held = self.held, []
+        self.visit(node.body)
+        self.held = saved
+
+    # -- rule 1: guarded fields --------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        self.generic_visit(node)
+        base = unparse(node.value)
+        lock_attr, owner = self.a.guard_for(base, node.attr, self.cls)
+        if lock_attr is None or self.exempt_guarded:
+            return
+        group = owner.lock_group(lock_attr)
+        if any(h.base == base and h.attr in group for h in self.held):
+            return
+        key = (node.lineno, f"guard:{base}.{node.attr}")
+        if key in self.reported:
+            return
+        self.reported.add(key)
+        self.a.report(
+            self.src, node.lineno, "guarded-field",
+            f"{base}.{node.attr} is guarded by {base}.{lock_attr} "
+            f"(declared on {owner.name}) but accessed outside `with {base}.{lock_attr}` "
+            f"in {self._where()}",
+        )
+
+    # -- rule 2: blocking under a strict lock ------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        strict = [h for h in self.held if h.policy == "strict"]
+        if not strict:
+            return
+        label = self._blocking_label(node)
+        if label is None:
+            return
+        key = (node.lineno, f"block:{label}")
+        if key in self.reported:
+            return
+        self.reported.add(key)
+        held_desc = ", ".join(h.expr for h in strict)
+        self.a.report(
+            self.src, node.lineno, "blocking-under-lock",
+            f"{label} while holding {held_desc} in {self._where()}; "
+            f"a strict lock must never be held across blocking or device work",
+        )
+
+    def _blocking_label(self, node: ast.Call) -> Optional[str]:
+        func = node.func
+        if isinstance(func, ast.Name):
+            return "time.sleep(...)" if func.id == "sleep" else None
+        if not isinstance(func, ast.Attribute):
+            return None
+        dotted = dotted_name(func) or ""
+        if dotted == "time.sleep":
+            return "time.sleep(...)"
+        attr = func.attr
+        if attr in BLOCKING_ATTRS:
+            if attr == "wait":
+                # waiting on the condition you hold releases it: the one
+                # legal blocking wait under a lock.
+                base = unparse(func.value)
+                if any(base == h.expr for h in self.held):
+                    return None
+            return f"blocking call .{attr}(...)"
+        if DEVICE_DISPATCH.match(attr):
+            return f"device dispatch .{attr}(...)"
+        return None
+
+    def _where(self) -> str:
+        owner = f"{self.cls.name}." if self.cls else ""
+        return f"{owner}{self.fn.name}"
+
+
+class LockLint:
+    def __init__(self, sources: Sequence[SourceFile]):
+        self.sources = list(sources)
+        self.classes = collect_lock_decls(self.sources)
+        self.families = class_families(self.classes)
+        # field name -> owning ClassLocks, for cross-object checks; ambiguous
+        # names (declared guarded in >1 class) are dropped rather than guessed.
+        counts: Dict[str, List[ClassLocks]] = {}
+        for info in self.classes.values():
+            for f in info.guarded:
+                counts.setdefault(f, []).append(info)
+        self.global_guarded = {f: owners[0] for f, owners in counts.items()
+                               if len(owners) == 1}
+        self.findings: List[Finding] = []
+        self._src: Optional[SourceFile] = None
+        self._cls_stack: List[Optional[ClassLocks]] = []
+
+    # -- declaration lookups ------------------------------------------------
+    def as_lock(self, expr: ast.AST, cls: Optional[ClassLocks]) -> Optional[_Held]:
+        """Classify a with-item as a held lock, resolving its policy."""
+        if not isinstance(expr, ast.Attribute):
+            return None
+        base = unparse(expr.value)
+        attr = expr.attr
+        decls: List[LockDecl] = []
+        if base == "self" and cls is not None:
+            decls = family_lock_decls(self.classes, self.families, cls.name, attr)
+        if not decls:
+            owners = [c.locks[attr] for c in self.classes.values() if attr in c.locks]
+            if len(owners) == 1:
+                decls = owners
+        if not decls and not LOCKISH.search(attr):
+            return None
+        # a lock is only blocking-ok if every declaration in scope says so
+        policy = ("blocking-ok"
+                  if decls and all(d.policy == "blocking-ok" for d in decls)
+                  else "strict")
+        return _Held(expr=unparse(expr), base=base, attr=attr, policy=policy)
+
+    def guard_for(self, base: str, attr: str,
+                  cls: Optional[ClassLocks]) -> Tuple[Optional[str], Optional[ClassLocks]]:
+        if base == "self" and cls is not None:
+            for member in sorted(self.families.get(cls.name, {cls.name})):
+                info = self.classes.get(member)
+                if info is not None and attr in info.guarded:
+                    return info.guarded[attr], info
+            return None, None
+        owner = self.global_guarded.get(attr)
+        if owner is not None and owner is not cls:
+            return owner.guarded[attr], owner
+        return None, None
+
+    # -- driving ------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        for src in self.sources:
+            self._src = src
+            self._lint_module(src)
+        return self.findings
+
+    def _lint_module(self, src: SourceFile) -> None:
+        for node in src.tree.body:
+            self._lint_node(src, node, cls=None)
+
+    def _lint_node(self, src: SourceFile, node: ast.AST, cls: Optional[ClassLocks]) -> None:
+        if isinstance(node, ast.ClassDef):
+            info = self.classes.get(node.name)
+            for child in node.body:
+                self._lint_node(src, child, cls=info)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            linter = _FunctionLinter(self, src, cls, node)
+            for stmt in node.body:
+                linter.visit(stmt)
+
+    def report(self, src: SourceFile, line: int, code: str, message: str) -> None:
+        f = Finding(tool=TOOL, path=src.path, line=line, code=code, message=message)
+        self.findings.append(apply_suppression(src, f))
+
+
+def lint_files(paths: Sequence[str]) -> List[Finding]:
+    return LockLint([SourceFile.load(p) for p in paths]).run()

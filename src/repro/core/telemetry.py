@@ -609,7 +609,7 @@ class MonitorSampler:
         self.registry = registry
         self.clock = clock
         self._lock = threading.Lock()
-        self._series: Dict[str, Deque[dict]] = {}
+        self._series: Dict[str, Deque[dict]] = {}  # guarded by: _lock
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.samples_taken = 0
@@ -620,18 +620,27 @@ class MonitorSampler:
         return self._thread is not None and self._thread.is_alive()
 
     def start(self) -> "MonitorSampler":
-        if self._thread is not None:
-            raise RuntimeError("monitor sampler already started")
-        self._stop.clear()
-        self._thread = threading.Thread(target=self._run, daemon=True, name="monitor-sampler")
-        self._thread.start()
+        with self._lock:
+            if self._thread is not None:
+                raise RuntimeError("monitor sampler already started")
+            self._stop.clear()
+            t = self._thread = threading.Thread(
+                target=self._run, daemon=True, name="monitor-sampler")
+        t.start()
         return self
 
     def stop(self) -> None:
+        """Idempotent and re-entrancy-safe: the thread handle is swapped out
+        under the ring lock, so of N concurrent stops exactly one joins (the
+        rest see None); the join itself runs with no lock held — a stop
+        racing a mid-sweep ``sample_once`` must never wait on a thread that
+        is about to take the lock we hold. Safe to call from the sampler
+        thread itself (a probe that stops its own sampler cannot self-join)."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None and t is not threading.current_thread():
+            t.join()
 
     def __enter__(self) -> "MonitorSampler":
         if self._thread is None:

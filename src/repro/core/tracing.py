@@ -151,7 +151,8 @@ class Tracer:
         self.capacity = capacity
         self.enabled = enabled
         self._lock = threading.Lock()
-        self._ring: Deque[Trace] = deque(maxlen=capacity)
+        self._ring: Deque[Trace] = deque(maxlen=capacity)  # guarded by: _lock
+        self._closed = False            # guarded by: _lock
 
     def begin(self, rid: int, **attrs) -> Optional[Trace]:
         if not self.enabled:
@@ -163,10 +164,19 @@ class Tracer:
             return
         trace.attrs.update(attrs)
         with self._lock:
-            if trace.finished:
+            if trace.finished or self._closed:
                 return               # exactly-once: hedge copies both settle
             trace.finished = True
             self._ring.append(trace)
+
+    def close(self) -> None:
+        """Idempotent shutdown: disable ``begin`` and stop accepting late
+        ``finish`` calls, so in-flight losers of a hedge race settling after
+        shutdown cannot grow the ring. Finished traces stay exportable;
+        calling ``close`` any number of times (from any thread) is safe."""
+        self.enabled = False
+        with self._lock:
+            self._closed = True
 
     def __len__(self) -> int:
         with self._lock:

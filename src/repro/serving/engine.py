@@ -657,7 +657,7 @@ class InferenceEngine(_EngineBase):
         self._step_budget = ecfg.step_token_budget
         self._prefill_shapes = set()
         self._compile_ema_s: Optional[float] = None
-        self.lock = threading.RLock()
+        self.lock = threading.RLock()  # locklint: blocking-ok one stepper owns the donated buffers
         B, L = ecfg.max_slots, ecfg.max_len
         self.cache = self.model.init_cache(B, L)
         self._kv_bytes_per_token = _kv_bytes_per_token(cfg, self.cache, B * L)
@@ -1060,7 +1060,7 @@ class PagedInferenceEngine(_EngineBase):
         self._step_budget = pcfg.step_token_budget
         self._prefill_shapes = set()
         self._compile_ema_s: Optional[float] = None
-        self.lock = threading.RLock()
+        self.lock = threading.RLock()  # locklint: blocking-ok one stepper owns the donated buffers
         B = pcfg.max_slots
         if pcfg.chained_tables:
             # Second-level geometry: a sequence can hold at most

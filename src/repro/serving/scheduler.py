@@ -93,9 +93,9 @@ class EngineLoop:
         self.name = name
         self.registry = registry if registry is not None else default_registry()
         self._lock = threading.Lock()
-        self._futures: Dict[int, _SeqFuture] = {}
-        self._unclaimed: Dict[int, Sequence] = {}
-        self._abandoned: set = set()    # timed-out sids: discard on finish
+        self._futures: Dict[int, _SeqFuture] = {}    # guarded by: _lock
+        self._unclaimed: Dict[int, Sequence] = {}    # guarded by: _lock
+        self._abandoned: set = set()    # guarded by: _lock -- timed-out sids: discard on finish
         self._work = threading.Event()
         self._stop_flag = False
         self._thread: Optional[threading.Thread] = None
@@ -115,11 +115,13 @@ class EngineLoop:
         return self._thread is not None and self._thread.is_alive()
 
     def start(self) -> "EngineLoop":
-        if self._thread is not None:
-            raise RuntimeError("engine loop already started")
-        self._stop_flag = False
-        self._thread = threading.Thread(target=self._run, daemon=True, name="engine-loop")
-        self._thread.start()
+        with self._lock:
+            if self._thread is not None:
+                raise RuntimeError("engine loop already started")
+            self._stop_flag = False
+            t = self._thread = threading.Thread(
+                target=self._run, daemon=True, name="engine-loop")
+        t.start()
         return self
 
     def stop(self) -> None:
@@ -129,12 +131,18 @@ class EngineLoop:
         timed out and left), so nothing will ever claim them — a
         stopped-then-restarted loop (``stop()`` resets ``_thread``, so
         ``start()`` is allowed again) must begin with a clean registry
-        instead of carrying orphaned results forever."""
+        instead of carrying orphaned results forever.
+
+        Idempotent and re-entrancy-safe: the thread handle is swapped out
+        under ``_lock`` so of N racing stops exactly one joins, and the join
+        runs with no lock held — the step thread takes ``_lock`` in
+        ``_resolve``, so joining it under the lock would deadlock."""
         self._stop_flag = True
         self._work.set()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None and t is not threading.current_thread():
+            t.join()
         self._fail_pending(RuntimeError("engine loop stopped"))
         with self._lock:
             self._unclaimed.clear()

@@ -1,0 +1,268 @@
+"""Runtime lock-order witness (``repro.analysis.witness``).
+
+Unit tests drive the witness wrappers directly (edge recording, inversion
+detection, RLock reentrancy, the Condition wait dance); the soak tests
+instrument the real runtime's locks and replay the concurrency soaks from
+``test_router_concurrency`` / ``test_continuous_batching`` under the
+witness, then assert the observed acquisition orders are acyclic on their
+own AND when combined with the committed static lock-order graph.
+
+The engine-backed soaks carry "engine" in their names so the fast
+``scripts/ci.sh analyze`` gate can deselect them with ``-k "not engine"``
+while the full tier-1 run still exercises them.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.analysis.witness import (
+    LockWitness,
+    base_name,
+    instrument_loop,
+    instrument_router,
+)
+from repro.core import Request, StraightLinePolicy, Thresholds, Tier
+from repro.core.router import Backend, StraightLineRouter
+
+
+def static_edges():
+    from repro.analysis.__main__ import repo_root, run_all
+
+    _, graph = run_all(repo_root(), ["lockorder"])
+    return {(e.src, e.dst) for e in graph.edges}
+
+
+REENTRANT = {"_EngineBase.lock"}
+
+
+# ---------------------------------------------------------------------------
+# Wrapper unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_nested_acquire_records_edge():
+    w = LockWitness()
+    a, b = w.wrap("A"), w.wrap("B")
+    with a:
+        with b:
+            pass
+    assert w.edge_set() == {("A", "B")}
+    w.assert_consistent()                          # one direction: fine
+
+
+def test_inversion_detected_without_deadlocking():
+    """A-under-B and B-under-A observed in sequence (never concurrently, so
+    the run itself cannot deadlock) must still fail the consistency check."""
+    w = LockWitness()
+    a, b = w.wrap("A"), w.wrap("B")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    with pytest.raises(AssertionError, match="cycle"):
+        w.assert_consistent()
+
+
+def test_rlock_reentry_records_no_self_edge():
+    w = LockWitness()
+    r = w.wrap("R", reentrant=True)
+    with r:
+        with r:
+            with r:
+                pass
+    assert w.edge_set() == set()
+    w.assert_consistent()
+
+
+def test_non_reentrant_self_edge_fails():
+    w = LockWitness()
+    w.on_acquired("L")
+    w.on_acquired("L")                             # simulated re-acquire while held
+    with pytest.raises(AssertionError, match="re-acquired while held"):
+        w.assert_consistent()
+    w.assert_consistent(reentrant=["L"])           # declared reentrant: legal
+
+
+def test_observed_edge_inverting_static_graph_fails():
+    w = LockWitness()
+    b, a = w.wrap("B"), w.wrap("A")
+    with b:
+        with a:
+            pass
+    w.assert_consistent()                          # acyclic on its own
+    with pytest.raises(AssertionError, match="static"):
+        w.assert_consistent(static_edges={("A", "B")})
+
+
+def test_instance_suffixes_distinguish_locks_but_strip_for_static():
+    w = LockWitness()
+    c1, c2 = w.wrap("Backend.cond[FLASK]"), w.wrap("Backend.cond[DOCKER]")
+    with c1:
+        with c2:
+            pass
+    with c2:
+        with c1:
+            pass
+    assert base_name("Backend.cond[FLASK]") == "Backend.cond"
+    # two instances of one static node taken in both orders is a real
+    # ordering hazard: full instance names participate in cycle detection
+    with pytest.raises(AssertionError, match="cycle"):
+        w.assert_consistent()
+
+
+def test_condition_wait_releases_and_reacquires_through_witness():
+    """Condition.wait's release/re-acquire dance must route through the
+    wrapper: while the consumer sleeps in wait() it holds nothing, so a
+    producer acquiring other locks records no edge from the condition."""
+    w = LockWitness()
+    lk = w.wrap("C.cond")
+    cond = threading.Condition(lk)
+    other = w.wrap("C.other")
+    ready = []
+
+    def consumer():
+        with cond:
+            while not ready:
+                cond.wait(5)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)                               # consumer is inside wait()
+    with other:                                    # no lock held by this thread
+        pass
+    with cond:
+        ready.append(1)
+        cond.notify()
+    t.join(5)
+    assert not t.is_alive()
+    assert w.edge_set() == set()                   # no ordering was ever observed
+    w.assert_consistent()
+
+
+def test_unknown_edges_reports_unpredicted_orderings():
+    w = LockWitness()
+    with w.wrap("X[1]"):
+        with w.wrap("Y"):
+            pass
+    assert w.unknown_edges({("A", "B")}) == {("X", "Y")}
+    assert w.unknown_edges({("X", "Y")}) == set()
+
+
+# ---------------------------------------------------------------------------
+# Router soak under the witness (fake backends: fast, no JAX)
+# ---------------------------------------------------------------------------
+
+
+def test_router_soak_under_witness():
+    """The fake-backend router soak from test_router_concurrency, with the
+    registry lock and every backend condition witnessed: whatever
+    interleavings the workers + hedge monitor produce, the observed lock
+    orders must stay consistent with the static graph."""
+    w = LockWitness()
+
+    def flask_run(req):
+        time.sleep(0.001)
+        if req.rid % 7 == 3:
+            raise RuntimeError("flask flake")
+        return f"f:{req.rid}"
+
+    router = StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, flask_run, capacity=4, queue_cap=400),
+            Tier.DOCKER: Backend(Tier.DOCKER, lambda req: f"d:{req.rid}", capacity=4, queue_cap=400),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: f"s:{req.rid}", capacity=8, queue_cap=400),
+        },
+        policy=StraightLinePolicy(Thresholds(F=1e9, D=1e6)),
+        hedge_after_s=0.005,
+        results_cap=500,
+    )
+    instrument_router(router, w)
+    router.start(4)
+
+    def submitter(base):
+        for i in range(20):
+            router.submit(Request(rid=base + i, arrival_t=0.0, data_size=100.0, timeout_s=60.0))
+
+    threads = [threading.Thread(target=submitter, args=(k * 1000,)) for k in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    router.drain(timeout=60)
+    router.stop()
+
+    assert router.metrics.total == 120
+    counts = w.acquire_counts()
+    assert counts.get("StraightLineRouter._lock", 0) > 0
+    assert any(base_name(k) == "Backend.cond" and v > 0 for k, v in counts.items())
+    w.assert_consistent(static_edges(), reentrant=REENTRANT)
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed soaks (real JAX engines; deselectable with -k "not engine")
+# ---------------------------------------------------------------------------
+
+PROMPT, NEW, MAXLEN, PS = 5, 3, 64, 16
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    from repro.configs.registry import get_config
+
+    return get_config("smollm-360m", smoke=True).replace(attn_chunk=64)
+
+
+def _paged(cfg, prefix_cache=False, params=None):
+    from repro.serving.engine import PagedEngineConfig, PagedInferenceEngine
+
+    return PagedInferenceEngine(
+        cfg,
+        PagedEngineConfig(page_size=PS, num_pages=1 + 2 * MAXLEN // PS,
+                          max_slots=2, max_seq_len=MAXLEN, max_new_tokens=NEW,
+                          prefix_cache=prefix_cache),
+        params=params,
+    )
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_engine_loop_soak_under_witness(cfg, prefix_cache):
+    """The continuous-batching soak under the witness: EngineLoop registry
+    lock + the engine's coarse step RLock witnessed while submitter threads
+    run the admit->resolve cycle — with and without the prefix cache in the
+    admission path."""
+    import numpy as np
+
+    from repro.serving.scheduler import EngineLoop
+
+    w = LockWitness()
+    eng = _paged(cfg, prefix_cache=prefix_cache)
+    loop = EngineLoop(eng)
+    instrument_loop(loop, w)
+
+    prompts = [
+        list(np.random.default_rng(i).integers(1, cfg.vocab_size, PROMPT))
+        for i in range(4)
+    ]
+    prompts.append(list(prompts[0]))               # shared prefix: cache hit path
+    outs = [None] * len(prompts)
+    with loop:
+        def worker(i):
+            outs[i] = loop.wait(loop.submit(prompts[i]), 120).out
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in range(len(prompts))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    assert all(len(o) == NEW for o in outs)
+    assert outs[4] == outs[0]                      # prefix reuse must not change tokens
+    counts = w.acquire_counts()
+    assert counts.get("EngineLoop._lock", 0) > 0
+    assert counts.get("_EngineBase.lock", 0) > 0
+    w.assert_consistent(static_edges(), reentrant=REENTRANT)
+    if prefix_cache:
+        eng.prefix_cache.check_invariants()

@@ -1,0 +1,259 @@
+"""Shutdown idempotency + re-entrancy regressions.
+
+The lifecycle contract for every threaded component (MonitorSampler,
+EngineLoop, StraightLineRouter, Tracer): ``stop``/``close`` may be called
+twice, from several threads at once, or from inside the component's own
+worker thread (a probe or callback that tears down its owner), and none of
+those may deadlock, double-join, or raise. The pattern under test is
+swap-the-handle-under-the-lock, join-outside-the-lock, never-join-yourself.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import Request, StraightLinePolicy, Thresholds, Tier
+from repro.core.router import Backend, StraightLineRouter
+from repro.core.telemetry import CapacityGauge, MonitorSampler
+from repro.core.tracing import Tracer
+
+
+def _sampler(interval_s=0.001, probe=None):
+    gauge = CapacityGauge()
+    gauge.register_stats("FLASK", probe or (lambda: {"free_slots": 1}))
+    return MonitorSampler(gauge, interval_s=interval_s)
+
+
+# ---------------------------------------------------------------------------
+# MonitorSampler
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_stop_twice_and_never_started():
+    s = _sampler()
+    s.stop()                                       # never started: no-op
+    s.start()
+    assert s.running
+    s.stop()
+    s.stop()                                       # second stop: no-op, no raise
+    assert not s.running
+
+
+def test_sampler_concurrent_stops_single_join():
+    """N racing stops: exactly one swaps the live handle out; every call
+    returns without deadlock and the thread is dead afterwards."""
+    s = _sampler()
+    s.start()
+    barrier = threading.Barrier(8)
+
+    def stopper():
+        barrier.wait()
+        s.stop()
+
+    threads = [threading.Thread(target=stopper) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(10)
+    assert not any(t.is_alive() for t in threads)
+    assert not s.running
+
+
+def test_sampler_stop_during_sweep_does_not_deadlock():
+    """A stop issued while sample_once holds the ring lock must not join
+    under that lock: the probe blocks mid-sweep until the stopper has
+    committed to stopping, forcing the historical deadlock interleaving."""
+    in_probe = threading.Event()
+    release = threading.Event()
+
+    def slow_probe():
+        in_probe.set()
+        release.wait(10)
+        return {"free_slots": 1}
+
+    s = _sampler(probe=slow_probe)
+    s.start()
+    assert in_probe.wait(10), "sampler never swept"
+    stopper = threading.Thread(target=s.stop)
+    stopper.start()
+    time.sleep(0.05)                               # stop() is past the swap
+    release.set()
+    stopper.join(10)
+    assert not stopper.is_alive() and not s.running
+
+
+def test_sampler_self_stop_from_probe():
+    """A probe that stops its own sampler runs on the sampler thread: stop
+    must skip the self-join instead of deadlocking on it."""
+    s = _sampler(probe=lambda: s.stop() or {"free_slots": 1})
+    s.start()
+    deadline = time.monotonic() + 10
+    while s.running and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert not s.running, "self-stop deadlocked"
+
+
+def test_sampler_restart_after_stop():
+    s = _sampler()
+    s.start()
+    s.stop()
+    s.start()                                      # handle was cleared: restart works
+    assert s.running
+    s.stop()
+    with s:                                        # context manager path too
+        assert s.running
+    assert not s.running
+
+
+# ---------------------------------------------------------------------------
+# EngineLoop (fake engine: no JAX)
+# ---------------------------------------------------------------------------
+
+
+class _FakeEngine:
+    """Just enough surface for EngineLoop's step cycle: no waiting work."""
+
+    waiting = ()
+    slot_seq = (None,)
+
+    def loop_stats(self):
+        return {}
+
+    def capacity_now(self):
+        return {"free_slots": 1}
+
+    def admit_waiting(self):
+        return []
+
+    def step_once(self):
+        return []
+
+    def submit(self, prompt):
+        raise AssertionError("not used")
+
+
+def _loop():
+    from repro.serving.scheduler import EngineLoop
+
+    return EngineLoop(_FakeEngine(), idle_wait_s=0.001)
+
+
+def test_loop_stop_twice_and_unstarted():
+    loop = _loop()
+    loop.stop()                                    # never started
+    loop.start()
+    assert loop.running
+    loop.stop()
+    loop.stop()
+    assert not loop.running
+
+
+def test_loop_concurrent_stops():
+    loop = _loop()
+    loop.start()
+    barrier = threading.Barrier(6)
+
+    def stopper():
+        barrier.wait()
+        loop.stop()
+
+    threads = [threading.Thread(target=stopper) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(10)
+    assert not any(t.is_alive() for t in threads)
+    assert not loop.running
+    loop.start()                                   # restartable after full stop
+    loop.stop()
+
+
+# ---------------------------------------------------------------------------
+# StraightLineRouter
+# ---------------------------------------------------------------------------
+
+
+def _router():
+    return StraightLineRouter(
+        {
+            Tier.FLASK: Backend(Tier.FLASK, lambda req: "f", capacity=1),
+            Tier.DOCKER: Backend(Tier.DOCKER, lambda req: "d", capacity=1),
+            Tier.SERVERLESS: Backend(Tier.SERVERLESS, lambda req: "s", capacity=4),
+        },
+        policy=StraightLinePolicy(Thresholds(F=1e9, D=1e6)),
+    )
+
+
+def test_router_stop_twice_and_concurrent():
+    router = _router()
+    router.stop()                                  # never started
+    router.start(2)
+    router.submit(Request(rid=1, arrival_t=0.0, data_size=100.0, timeout_s=30.0))
+    router.drain(timeout=30)
+    barrier = threading.Barrier(4)
+
+    def stopper():
+        barrier.wait()
+        router.stop()
+
+    threads = [threading.Thread(target=stopper) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(10)
+    assert not any(t.is_alive() for t in threads)
+    assert not router._threads
+    assert router.result(1) in {"f", "d", "s"}     # completed before the stops
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_close_idempotent_and_final():
+    tr = Tracer(capacity=8)
+    t1 = tr.begin(1)
+    tr.finish(t1)
+    tr.close()
+    tr.close()                                     # second close: no-op
+    assert tr.begin(2) is None                     # disabled after close
+    assert len(tr) == 1 and tr.traces()[0]["rid"] == 1
+
+
+def test_tracer_late_finish_after_close_dropped():
+    """The losing copy of a hedge race settling after shutdown must not
+    grow the ring."""
+    tr = Tracer(capacity=8)
+    straggler = tr.begin(7)
+    tr.close()
+    tr.finish(straggler)
+    assert len(tr) == 0
+    assert not straggler.finished
+
+
+def test_tracer_concurrent_close_and_finish():
+    tr = Tracer(capacity=1024)
+    traces = [tr.begin(i) for i in range(200)]
+    barrier = threading.Barrier(5)
+
+    def finisher(chunk):
+        barrier.wait()
+        for t in chunk:
+            tr.finish(t)
+
+    def closer():
+        barrier.wait()
+        tr.close()
+
+    threads = [threading.Thread(target=finisher, args=(traces[i::4],)) for i in range(4)]
+    threads.append(threading.Thread(target=closer))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(10)
+    assert not any(t.is_alive() for t in threads)
+    # whatever landed before the close is finished exactly once; the rest
+    # were dropped, and the ring only holds finished traces
+    assert all(d["rid"] in range(200) for d in tr.traces())
+    assert len(tr) == sum(t.finished for t in traces)
